@@ -1,0 +1,33 @@
+"""Inject the generated dry-run/roofline tables into EXPERIMENTS.md at the
+<!-- DRYRUN_TABLE --> / <!-- ROOFLINE_TABLE --> markers."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import json
+
+from benchmarks.report import render
+
+
+def main():
+    root = os.path.join(os.path.dirname(__file__), "..")
+    with open(os.path.join(root, "dryrun_results.json")) as f:
+        results = json.load(f)
+    text = render(results)
+    dry, roof = text.split("### Roofline")
+    roof = "### Roofline" + roof
+
+    path = os.path.join(root, "EXPERIMENTS.md")
+    with open(path) as f:
+        md = f.read()
+    md = md.replace("<!-- DRYRUN_TABLE -->", dry.strip())
+    md = md.replace("<!-- ROOFLINE_TABLE -->", roof.strip())
+    with open(path, "w") as f:
+        f.write(md)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Merge re-run cell results into dryrun_results.json (used after fixing a
+cell, e.g. the zamba2 SSD chunk-size memory fix)."""
+import json
+import sys
+
+
+def main(main_path, patch_path):
+    with open(main_path) as f:
+        results = json.load(f)
+    with open(patch_path) as f:
+        patches = json.load(f)
+    for p in patches:
+        key = (p["arch"], p["shape"], p.get("tier", "production"),
+               p.get("mesh"))
+        replaced = False
+        for i, r in enumerate(results):
+            rkey = (r["arch"], r["shape"], r.get("tier", "production"),
+                    r.get("mesh"))
+            if rkey == key:
+                results[i] = p
+                replaced = True
+                break
+        if not replaced:
+            results.append(p)
+        print("patched" if replaced else "appended", key)
+    with open(main_path, "w") as f:
+        json.dump(results, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1], sys.argv[2])

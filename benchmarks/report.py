@@ -1,0 +1,116 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from
+dryrun_results.json.
+
+    PYTHONPATH=src python -m benchmarks.report [--json dryrun_results.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}GiB" if b > 2**28 else f"{b / 2**20:.0f}MiB"
+
+
+def render(results):
+    prod = {}
+    roof = {}
+    for r in results:
+        key = (r["arch"], r["shape"])
+        if r.get("tier") == "roofline":
+            roof[key] = r
+        else:
+            prod.setdefault(key, {})[r.get("mesh", "?")] = r
+
+    lines = []
+    lines.append("### Dry-run matrix (production programs, scan-over-layers)")
+    lines.append("")
+    lines.append("| arch | shape | 16x16 | 2x16x16 | peak/dev (raw CPU) |"
+                 " peak/dev (TPU est.) | compile s |")
+    lines.append("|---|---|---|---|---|---|---|")
+    n_ok = n_skip = n_fail = 0
+    for key in sorted(prod):
+        cells = prod[key]
+        row = [key[0], key[1]]
+        peak = tpeak = comp = "-"
+        for mesh in ("16x16", "2x16x16"):
+            r = cells.get(mesh) or cells.get("?")
+            if r is None:
+                row.append("-")
+                continue
+            st = r.get("status", "?")
+            if st == "ok":
+                row.append("ok")
+                n_ok += 1
+                if mesh == "16x16" and r.get("memory_analysis"):
+                    ma = r["memory_analysis"]
+                    peak = f"{ma['peak_per_device_gib']:.2f}"
+                    tpeak = f"{ma.get('tpu_peak_estimate_gib', float('nan')):.2f}"
+                    comp = f"{r.get('compile_s', 0):.0f}"
+            elif st.startswith("skip"):
+                row.append("skip")
+                n_skip += 1
+            else:
+                row.append("FAIL")
+                n_fail += 1
+        row += [peak, tpeak, comp]
+        lines.append("| " + " | ".join(str(x) for x in row) + " |")
+    lines.append("")
+    lines.append(f"totals: {n_ok} compiled ok, {n_skip} skipped "
+                 f"(long_500k x full-attention archs, per assignment), "
+                 f"{n_fail} failed.")
+    lines.append("")
+
+    lines.append("### Roofline (single-pod 16x16, per-device terms; "
+                 "unrolled reduced-depth programs extrapolated to full depth)")
+    lines.append("")
+    lines.append("| arch | shape | compute s | memory s | collective s "
+                 "(CPU-f32 / TPU-bf16) | dominant (TPU) | "
+                 "MODEL_FLOPS/HLO_FLOPs | bottleneck note |")
+    lines.append("|---|---|---|---|---|---|---|---|")
+    NOTES = {
+        "memory": "unfused attention score traffic + remat reads -> "
+                  "Pallas flash kernel (see §Perf)",
+        "collective": "FSDP weight gathers + grad reduce-scatter -> "
+                      "CHAOS delayed overlap / bf16 compression (see §Perf)",
+        "compute": "MXU-bound — good; raise arithmetic intensity only",
+    }
+    for key in sorted(roof):
+        r = roof[key]
+        if r.get("status") != "ok":
+            if str(r.get("status", "")).startswith("skip"):
+                lines.append(f"| {key[0]} | {key[1]} | - | - | - | skip | - |"
+                             f" {r['status'][:60]} |")
+            continue
+        rl = r["roofline"]
+        # XLA-CPU promotes every communicated bf16 tensor to f32; all
+        # tensors this framework communicates are bf16 by design -> /2
+        x_tpu = rl["collective_s"] / 2
+        terms = {"compute": rl["compute_s"], "memory": rl["memory_s"],
+                 "collective": x_tpu}
+        dom = max(terms, key=terms.get)
+        lines.append(
+            f"| {key[0]} | {key[1]} | {rl['compute_s']:.4f} | "
+            f"{rl['memory_s']:.4f} | {rl['collective_s']:.4f} / "
+            f"{x_tpu:.4f} | **{dom}** | {rl['useful_flops_ratio']:.2f} | "
+            f"{NOTES[dom]} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=os.path.join(
+        os.path.dirname(__file__), "..", "dryrun_results.json"))
+    args = ap.parse_args()
+    with open(args.json) as f:
+        results = json.load(f)
+    print(render(results))
+
+
+if __name__ == "__main__":
+    main()

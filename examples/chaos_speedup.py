@@ -1,0 +1,81 @@
+"""Paper reproduction: the CHAOS speedup/scalability study.
+
+Reproduces, from the performance model (Section 5.2) + measured worker-model
+runs on forced host devices:
+  - Fig 7/8-style speedup curves (vs 1 Xeon Phi thread),
+  - Table 8 (480..3840-thread predictions),
+  - Result 3 headline numbers,
+  - a *measured* multi-worker CHAOS run (4 host devices) demonstrating the
+    worker model (per-replica instances, delayed gradient exchange).
+
+    PYTHONPATH=src python examples/chaos_speedup.py
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+sys.path.insert(0, SRC)
+
+from repro.core import perf_model as pm
+
+
+def model_curves():
+    print("== speedup vs Phi 1T (performance model, Listing 2) ==")
+    print(f"{'threads':>8} {'small':>8} {'medium':>8} {'large':>8}")
+    for p in (15, 30, 60, 120, 180, 240, 244):
+        row = [f"{pm.predict_speedup(a, p):8.1f}"
+               for a in ("small", "medium", "large")]
+        print(f"{p:8d} " + " ".join(row))
+    print("paper Result 3: up to 103x vs Phi 1T\n")
+
+    print("== Table 8: predicted minutes beyond hardware threads ==")
+    t8 = pm.table8()
+    for arch in ("small", "medium", "large"):
+        cells = "  ".join(f"{p}T={t8[arch][p]:6.1f}min"
+                          for p in (480, 960, 1920, 3840))
+        paper = "  ".join(f"{pm.PAPER_TABLE8[arch][p]}" for p in
+                          (480, 960, 1920, 3840))
+        print(f"{arch:7s} pred: {cells}")
+        print(f"{'':7s} paper: {paper}")
+
+
+def measured_workers():
+    print("\n== measured: 4 CHAOS workers (forced host devices) ==")
+    code = textwrap.dedent("""
+        import jax, jax.numpy as jnp, time
+        from repro.core.chaos import SyncConfig, worker_train_fn, \\
+            replicate_for_workers, zeros_like_f32
+        from repro.launch.mesh import make_host_mesh
+        import repro.configs as C
+        from repro.models.api import get_ops
+        from repro.data.mnist import make_dataset
+
+        cfg = C.get("chaos-small")
+        ops = get_ops(cfg)
+        n = 4
+        mesh = make_host_mesh(n)
+        imgs, labels = make_dataset(n * 16 * 12, seed=0)
+        params = ops.init(jax.random.key(0))
+        state = {"params": replicate_for_workers(params, n),
+                 "prev_grad": replicate_for_workers(zeros_like_f32(params), n),
+                 "step": jnp.zeros((n,), jnp.int32)}
+        fn = worker_train_fn(ops.loss, lambda s: 0.05, SyncConfig("chaos"), mesh)
+        for t in range(12):
+            lo = t * n * 16
+            b = {"images": imgs[lo:lo+n*16].reshape(n, 16, 29, 29, 1),
+                 "labels": labels[lo:lo+n*16].reshape(n, 16)}
+            state, m = fn(state, b)
+            print(f"  step {t:2d} worker-mean loss={float(m['loss']):.3f}")
+    """)
+    env = dict(os.environ, PYTHONPATH=SRC,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    print(out.stdout or out.stderr[-2000:])
+
+
+if __name__ == "__main__":
+    model_curves()
+    measured_workers()

@@ -1,0 +1,17 @@
+"""Batched serving example: prefill + decode with KV/state caches across
+three different architecture families (dense GQA, MLA compressed cache,
+attention-free RWKV state).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import serve
+
+if __name__ == "__main__":
+    for arch in ("qwen3-14b", "minicpm3-4b", "rwkv6-1.6b"):
+        print(f"== {arch} (reduced config) ==")
+        serve(arch, batch=2, prompt_len=12, gen=12, max_seq=32)

@@ -1,0 +1,23 @@
+"""llava-next-34b: VLM, 60L d_model=7168 56H (GQA kv=8) d_ff=20480 vocab=64000.
+
+anyres tiling -> the vision frontend is a STUB; ``input_specs`` provides
+precomputed patch embeddings (n_patches x d_model) concatenated before the
+text tokens.  [hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]
+"""
+from repro.core.types import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llava-next-34b", family="vlm",
+    n_layers=60, d_model=7168, n_heads=56, n_kv_heads=8, d_head=128,
+    d_ff=20480, vocab_size=64000, rope_theta=5e6,
+    n_patches=1024,  # anyres grid (stubbed frontend)
+)
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        name="llava-next-34b-smoke", family="vlm",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+        d_ff=128, vocab_size=512, n_patches=16,
+        scan_layers=False, remat=False,
+    )

@@ -1,0 +1,25 @@
+"""minicpm3-4b: dense 62L d_model=2560 40H d_ff=6400 vocab=73448 with MLA.
+
+Multi-head Latent Attention (compressed KV cache). [hf:openbmb/MiniCPM3-4B; hf]
+MLA ranks follow the published checkpoint: q_lora 768, kv_lora 256,
+qk_nope 64, qk_rope 32, v_head 64.  Vocab padded 73448 -> 73472.
+"""
+from repro.core.types import ArchConfig
+
+CONFIG = ArchConfig(
+    name="minicpm3-4b", family="mla",
+    n_layers=62, d_model=2560, n_heads=40, n_kv_heads=40, d_head=96,
+    d_ff=6400, vocab_size=73448, rope_theta=1e4,
+    q_lora_rank=768, kv_lora_rank=256,
+    qk_nope_dim=64, qk_rope_dim=32, v_head_dim=64,
+)
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        name="minicpm3-4b-smoke", family="mla",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_head=24,
+        d_ff=128, vocab_size=256,
+        q_lora_rank=32, kv_lora_rank=16, qk_nope_dim=16, qk_rope_dim=8,
+        v_head_dim=16, scan_layers=False, remat=False,
+    )

@@ -1,0 +1,22 @@
+"""minicpm-2b: dense 40L d_model=2304 36H (MHA kv=36) d_ff=5760 vocab=122753.
+
+WSD learning-rate schedule; llama-like arch. [arXiv:2404.06395; hf]
+Vocab padded 122753 -> 122880 for 16-way TP (see DESIGN.md §6).
+"""
+from repro.core.types import ArchConfig
+
+CONFIG = ArchConfig(
+    name="minicpm-2b", family="dense",
+    n_layers=40, d_model=2304, n_heads=36, n_kv_heads=36, d_head=64,
+    d_ff=5760, vocab_size=122753, rope_theta=1e4,
+    tie_embeddings=True, lr_schedule="wsd",
+)
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        name="minicpm-2b-smoke", family="dense",
+        n_layers=2, d_model=48, n_heads=6, n_kv_heads=6, d_head=8,
+        d_ff=96, vocab_size=256, tie_embeddings=True, lr_schedule="wsd",
+        scan_layers=False, remat=False,
+    )

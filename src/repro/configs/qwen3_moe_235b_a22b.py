@@ -1,0 +1,25 @@
+"""qwen3-moe-235b-a22b: MoE 94L d_model=4096 64H (GQA kv=4) vocab=151936.
+
+128 experts, top-8, per-expert d_ff=1536. [hf:Qwen/Qwen3-30B-A3B; hf]
+bf16 optimizer moments (memory headroom on 16G v5e — see DESIGN.md §4).
+"""
+from repro.core.types import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-moe-235b-a22b", family="moe",
+    n_layers=94, d_model=4096, n_heads=64, n_kv_heads=4, d_head=128,
+    d_ff=1536, vocab_size=151936, qk_norm=True, rope_theta=1e6,
+    n_experts=128, top_k=8, moe_d_ff=1536,
+    opt_moment_dtype="bfloat16",
+    micro_batches=4,  # activation stacks / 4 -> fits 16G v5e (EXPERIMENTS.md)
+)
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        name="qwen3-moe-235b-a22b-smoke", family="moe",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+        d_ff=96, vocab_size=512, qk_norm=True,
+        n_experts=8, top_k=2, moe_d_ff=96, capacity_factor=4.0,
+        scan_layers=False, remat=False,
+    )

@@ -1,0 +1,22 @@
+"""qwen3-moe-30b-a3b: MoE 48L d_model=2048 32H (GQA kv=4) vocab=151936.
+
+128 experts, top-8, per-expert d_ff=768. [hf:Qwen/Qwen3-30B-A3B; hf]
+"""
+from repro.core.types import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-moe-30b-a3b", family="moe",
+    n_layers=48, d_model=2048, n_heads=32, n_kv_heads=4, d_head=128,
+    d_ff=768, vocab_size=151936, qk_norm=True, rope_theta=1e6,
+    n_experts=128, top_k=8, moe_d_ff=768,
+)
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        name="qwen3-moe-30b-a3b-smoke", family="moe",
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+        d_ff=64, vocab_size=512, qk_norm=True,
+        n_experts=8, top_k=2, moe_d_ff=64, capacity_factor=4.0,
+        scan_layers=False, remat=False,
+    )

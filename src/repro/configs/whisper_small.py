@@ -1,0 +1,22 @@
+"""whisper-small: enc-dec, 12L(+12 enc) d_model=768 12H d_ff=3072 vocab=51865.
+
+Conv audio frontend is a STUB — ``input_specs`` supplies precomputed frame
+embeddings (enc_frames x d_model). [arXiv:2212.04356; unverified]
+Vocab padded 51865 -> 51968.
+"""
+from repro.core.types import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-small", family="encdec",
+    n_layers=12, n_enc_layers=12, d_model=768, n_heads=12, n_kv_heads=12,
+    d_head=64, d_ff=3072, vocab_size=51865, enc_frames=1500,
+)
+
+
+def smoke_config() -> ArchConfig:
+    return ArchConfig(
+        name="whisper-small-smoke", family="encdec",
+        n_layers=2, n_enc_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_head=16, d_ff=128, vocab_size=256, enc_frames=32,
+        scan_layers=False, remat=False,
+    )

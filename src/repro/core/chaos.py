@@ -1,0 +1,188 @@
+"""CHAOS gradient-synchronization strategies (the paper's core contribution,
+adapted to SPMD — see DESIGN.md §2 for the Xeon-Phi -> TPU mapping).
+
+Three modes, all usable by any architecture in the zoo:
+
+``bsp``     Bulk-synchronous SGD (paper strategy B, per-minibatch): the
+            gradient all-reduce sits on the critical path of every step.
+
+``chaos``   Controlled-Hogwild analogue: **staleness-1 delayed exchange**.
+            The step applies the *previous* step's globally-reduced gradient
+            (available immediately — no blocking collective), then computes
+            this step's gradients, whose cross-replica reduction only gates
+            the step *output*, so XLA's latency-hiding scheduler overlaps it
+            with backprop compute, per layer, in arbitrary completion order —
+            the SPMD realisation of "non-instant updates of weight parameters
+            without significant delay" + "implicit synchronization in
+            arbitrary order".  Update rule (Zinkevich-style delayed SGD):
+                w_{t+1} = w_t - lr * mean_i g_i(w_{t-1})
+
+``localsgd``  Paper strategy-C flavour: per-replica instances train on their
+            own weights for K steps, then parameters are averaged.  This
+            preserves CHAOS's "local updates are instant" property exactly
+            (each worker trains on its freshest local weights) at the price
+            of K-step weight divergence.  Implemented with an explicit
+            replica axis via shard_map (replicas must fit per-device).
+
+All modes keep the *semantics deterministic* — unlike racy shared-memory
+Hogwild, the same run reproduces bit-exactly, which is how we check the
+paper's Result 4 (accuracy parity) rigorously.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SyncConfig:
+    mode: str = "bsp"            # bsp | chaos | localsgd
+    local_steps: int = 8         # K for localsgd
+    compress: bool = False       # bf16 gradient exchange w/ error feedback
+
+
+def zeros_like_f32(tree):
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+
+# ---------------------------------------------------------------------------
+# pjit path (production): the train-step builder calls `transform_grads`
+# around the optimizer.  State carried in TrainState.sync (prev grads /
+# compression residuals).
+# ---------------------------------------------------------------------------
+def init_sync_state(sync: SyncConfig, params):
+    st = {}
+    if sync.mode == "chaos":
+        # staleness buffer in param dtype: for a 227B-param model an f32
+        # copy costs +5.2 GB/dev (measured, EXPERIMENTS.md §Perf H7) and
+        # gradients are produced in param dtype anyway
+        st["prev_grad"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, p.dtype), params)
+    if sync.compress:
+        st["residual"] = zeros_like_f32(params)
+    return st
+
+
+def compress_grads(grads, residual):
+    """bf16 gradient exchange with float32 error feedback.
+
+    The reduced tensor is bf16 (halves collective bytes vs f32); the
+    quantisation error is carried and re-injected next step, so the long-run
+    gradient sum is unbiased.
+    """
+    def one(g, r):
+        acc = g.astype(jnp.float32) + r
+        q = acc.astype(jnp.bfloat16)
+        return q, acc - q.astype(jnp.float32)
+    flat = jax.tree.map(one, grads, residual)
+    q = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+    r = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+    return q, r
+
+
+def transform_grads(sync: SyncConfig, grads, sync_state):
+    """Returns (grads_to_apply, new_sync_state)."""
+    new_state = dict(sync_state)
+    if sync.compress:
+        grads, new_state["residual"] = compress_grads(
+            grads, sync_state["residual"])
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if sync.mode == "chaos":
+        apply_g = sync_state["prev_grad"]
+        new_state["prev_grad"] = jax.tree.map(
+            lambda g: g.astype(jnp.float32), grads)
+        return apply_g, new_state
+    return grads, new_state
+
+
+# ---------------------------------------------------------------------------
+# shard_map path (per-replica instances; used by the CNN reproduction and
+# localsgd).  Explicit collectives -> we control exactly when workers
+# synchronize, mirroring the paper's worker model.
+# ---------------------------------------------------------------------------
+def replicate_for_workers(tree, n: int):
+    """Stack `n` copies along a leading replica axis."""
+    return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n,) + x.shape),
+                        tree)
+
+
+def make_worker_step(loss_fn: Callable, lr_fn: Callable, sync: SyncConfig,
+                     axis_name: str = "workers"):
+    """Inner per-worker step for shard_map execution.
+
+    state = {params, prev_grad?, step}; each worker holds its OWN params
+    (replica axis sharded over `axis_name`).  Sync behaviour:
+      bsp      - psum every step, workers stay identical
+      chaos    - apply own grad now + others' grads one step late
+      localsgd - local SGD; average params every K steps
+    """
+
+    def step(state, batch):
+        params = state["params"]
+        lr = lr_fn(state["step"])
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        n = jax.lax.psum(1, axis_name)
+
+        if sync.mode == "bsp":
+            g = jax.lax.pmean(grads, axis_name)
+            new_params = jax.tree.map(lambda p, gg: p - lr * gg, params, g)
+            new_state = {**state, "params": new_params}
+        elif sync.mode == "chaos":
+            # Controlled Hogwild: local gradient lands instantly; remote
+            # gradients arrive one step late (non-instant, no barrier on the
+            # fresh local contribution).
+            prev = state["prev_grad"]
+            remote_stale = jax.tree.map(
+                lambda s, sl: (jax.lax.psum(s, axis_name) - sl) / n,
+                prev, prev)
+            new_params = jax.tree.map(
+                lambda p, gl, rs: p - lr * (gl / n + rs),
+                params, grads, remote_stale)
+            new_state = {**state, "params": new_params, "prev_grad": grads}
+        elif sync.mode == "localsgd":
+            local = jax.tree.map(lambda p, gg: p - lr * gg, params, grads)
+            do_avg = (state["step"] + 1) % sync.local_steps == 0
+            avg = jax.lax.pmean(local, axis_name)
+            new_params = jax.tree.map(
+                lambda l, a: jnp.where(do_avg, a, l), local, avg)
+            new_state = {**state, "params": new_params}
+        else:
+            raise ValueError(sync.mode)
+        new_state["step"] = state["step"] + 1
+        metrics = {**metrics, "loss": loss}
+        metrics = jax.lax.pmean(metrics, axis_name)
+        return new_state, metrics
+
+    return step
+
+
+def worker_train_fn(loss_fn, lr_fn, sync: SyncConfig, mesh,
+                    axis_name: str = "workers"):
+    """Wrap the worker step in shard_map over a 1-D worker mesh.
+
+    state trees carry a leading replica axis sharded over `axis_name`;
+    batches carry a leading worker axis likewise.
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    inner = make_worker_step(loss_fn, lr_fn, sync, axis_name)
+
+    def whole(state, batch):
+        def body(state_l, batch_l):
+            state_l = jax.tree.map(lambda x: x[0], state_l)
+            batch_l = jax.tree.map(lambda x: x[0], batch_l)
+            new_state, metrics = inner(state_l, batch_l)
+            return (jax.tree.map(lambda x: x[None], new_state), metrics)
+        return shard_map(
+            body, mesh=mesh,
+            in_specs=(P(axis_name), P(axis_name)),
+            out_specs=(P(axis_name), P()),
+        )(state, batch)
+
+    return jax.jit(whole)

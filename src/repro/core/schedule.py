@@ -1,0 +1,44 @@
+"""Learning-rate schedules.
+
+- ``decay``: the paper's schedule — eta0 = 0.001 multiplied by 0.9 each epoch.
+- ``wsd``: Warmup-Stable-Decay (MiniCPM, arXiv:2404.06395).
+- ``constant`` / ``cosine``: standard baselines.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def make_lr_fn(kind: str, base_lr: float = 1e-3, *, steps_per_epoch: int = 1,
+               total_steps: int = 10_000, warmup: int = 100,
+               decay_frac: float = 0.1, decay_factor: float = 0.9):
+    if kind == "constant":
+        return lambda step: jnp.asarray(base_lr, jnp.float32)
+
+    if kind == "decay":  # the paper's: eta0 * factor^epoch
+        def fn(step):
+            epoch = step // steps_per_epoch
+            return base_lr * jnp.power(decay_factor, epoch).astype(jnp.float32)
+        return fn
+
+    if kind == "wsd":
+        stable_end = int(total_steps * (1 - decay_frac))
+        def fn(step):
+            step = jnp.asarray(step, jnp.float32)
+            warm = base_lr * jnp.minimum((step + 1) / max(warmup, 1), 1.0)
+            decay_t = jnp.clip((step - stable_end) /
+                               max(total_steps - stable_end, 1), 0.0, 1.0)
+            dec = base_lr * jnp.exp(jnp.log(0.1) * decay_t)  # 10x drop
+            return jnp.where(step < stable_end, warm, dec)
+        return fn
+
+    if kind == "cosine":
+        def fn(step):
+            step = jnp.asarray(step, jnp.float32)
+            warm = jnp.minimum(step / max(warmup, 1), 1.0)
+            prog = jnp.clip((step - warmup) / max(total_steps - warmup, 1),
+                            0.0, 1.0)
+            return base_lr * warm * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return fn
+
+    raise ValueError(kind)

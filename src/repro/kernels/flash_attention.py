@@ -1,0 +1,145 @@
+"""Pallas TPU flash-attention forward kernel.
+
+This is the §Perf hillclimb change for the memory-dominant training/prefill
+cells: the pure-jnp blockwise attention (models/layers.py) materialises the
+per-block score/prob matrices through HBM (XLA cannot fuse across the two
+dots), whereas this kernel keeps them in VMEM.
+
+Structure (the canonical TPU pallas flash pattern):
+  grid = (B, Hkv*G, n_q_blocks, n_kv_blocks)   -- sequential on TPU
+  scratch (VMEM, persists across the innermost kv iterations):
+      m (bq,), l (bq,), acc (bq, D)
+  @pl.when(kv_idx == 0)         -> init scratch
+  each step: s = q @ k^T, online-softmax update of (m, l, acc)
+  @pl.when(kv_idx == nk - 1)    -> out = acc / l
+
+Block sizes: bq x D and bk x D tiles; with bq = bk = 512 and D = 128 the
+working set is ~1.3MB in f32 — comfortably inside a v5e core's VMEM, and
+the (bq, bk) score tile feeds the MXU at 128-aligned shapes.
+
+Validated in interpret mode against models.layers.flash_attention /
+the naive oracle (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+               scale: float, causal: bool, block_q: int, block_k: int,
+               n_kv: int, seq_len: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    def compute():
+        q = q_ref[0, 0].astype(jnp.float32)      # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)      # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)      # (bk, Dv)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        q_pos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        k_pos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = k_pos < seq_len
+        if causal:
+            mask = mask & (k_pos <= q_pos)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev, l_prev = m_sc[...], l_sc[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + p.sum(axis=1)
+        acc_sc[...] = (acc_sc[...] * corr[:, None]
+                       + jax.lax.dot_general(
+                           p, v, (((1,), (0,)), ((), ())),
+                           preferred_element_type=jnp.float32))
+        m_sc[...] = m_new
+        l_sc[...] = l_new
+
+    if causal:
+        # skip fully-masked kv blocks (block start beyond q block end)
+        @pl.when(ki * block_k <= qi * block_q + block_q - 1)
+        def _():
+            compute()
+    else:
+        compute()
+
+    @pl.when(ki == n_kv - 1)
+    def _done():
+        l = l_sc[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_sc[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal: bool = True,
+                        softmax_scale=None, block_q: int = 512,
+                        block_k: int = 512, interpret: bool = True):
+    """q: (B, Hq, Tq, D); k, v: (B, Hkv, Tk, D/Dv) — GQA by head grouping.
+    Returns (B, Hq, Tq, Dv)."""
+    B, Hq, Tq, D = q.shape
+    Hkv, Tk, Dv = k.shape[1], k.shape[2], v.shape[3]
+    G = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else 1 / math.sqrt(D)
+    block_q = min(block_q, Tq)
+    block_k = min(block_k, Tk)
+
+    pad_q = (-Tq) % block_q
+    pad_k = (-Tk) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    nq = (Tq + pad_q) // block_q
+    nk = (Tk + pad_k) // block_k
+
+    # expand q to (B, Hkv, G*Tq... ) keep heads explicit: fold G into Q rows
+    qf = q.reshape(B, Hkv, G, Tq + pad_q, D)
+
+    kern = functools.partial(
+        _fa_kernel, scale=scale, causal=causal, block_q=block_q,
+        block_k=block_k, n_kv=nk, seq_len=Tk)
+
+    def one_group(qg):  # qg: (B, Hkv, Tq+pad, D)
+        return pl.pallas_call(
+            kern,
+            grid=(B, Hkv, nq, nk),
+            in_specs=[
+                pl.BlockSpec((1, 1, block_q, D),
+                             lambda b, h, i, j: (b, h, i, 0)),
+                pl.BlockSpec((1, 1, block_k, D),
+                             lambda b, h, i, j: (b, h, j, 0)),
+                pl.BlockSpec((1, 1, block_k, Dv),
+                             lambda b, h, i, j: (b, h, j, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, block_q, Dv),
+                                   lambda b, h, i, j: (b, h, i, 0)),
+            out_shape=jax.ShapeDtypeStruct((B, Hkv, Tq + pad_q, Dv), q.dtype),
+            scratch_shapes=[
+                pltpu.VMEM((block_q,), jnp.float32),
+                pltpu.VMEM((block_q,), jnp.float32),
+                pltpu.VMEM((block_q, Dv), jnp.float32),
+            ],
+            interpret=interpret,
+        )(qg, k, v)
+
+    outs = [one_group(qf[:, :, g]) for g in range(G)]
+    out = jnp.stack(outs, axis=2).reshape(B, Hq, Tq + pad_q, Dv)
+    return out[:, :, :Tq]

@@ -1,0 +1,45 @@
+"""jit'd public wrappers for the Pallas kernels, with custom VJP so the
+training path (the paper's hot-spot: conv backprop, Table 5) also runs
+through Pallas.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only — the
+kernels execute their bodies in Python for correctness validation; on a
+real TPU set REPRO_PALLAS_INTERPRET=0 or rely on backend detection).
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import conv2d as K
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false")
+    return jax.default_backend() != "tpu"
+
+
+@jax.custom_vjp
+def conv2d_valid(x, w):
+    """Valid conv, stride 1, NHWC x HWIO -> NHWC.  Pallas forward+backward."""
+    return K.conv2d_fwd(x, w, interpret=_interpret())
+
+
+def _fwd(x, w):
+    return conv2d_valid(x, w), (x, w)
+
+
+def _bwd(res, dy):
+    x, w = res
+    interp = _interpret()
+    dx = K.conv2d_dx(dy, w, x.shape, interpret=interp).astype(x.dtype)
+    dw = K.conv2d_dw(x, dy, w.shape, interpret=interp).astype(w.dtype)
+    return dx, dw
+
+
+conv2d_valid.defvjp(_fwd, _bwd)

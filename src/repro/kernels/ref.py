@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_valid_ref(x, w):
+    """x: (B, H, W, Cin) NHWC; w: (K, K, Cin, Cout) HWIO; VALID, stride 1."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def conv2d_dw_ref(x, dy):
+    """Weight gradient of conv2d_valid.  x: (B,H,W,Cin), dy: (B,Ho,Wo,Cout)
+    -> (K,K,Cin,Cout)."""
+    B, H, W, Cin = x.shape
+    _, Ho, Wo, Cout = dy.shape
+    K = H - Ho + 1
+    out = jnp.zeros((K, K, Cin, Cout), jnp.float32)
+    for kh in range(K):
+        for kw in range(K):
+            patch = x[:, kh:kh + Ho, kw:kw + Wo, :].astype(jnp.float32)
+            out = out.at[kh, kw].set(
+                jnp.einsum("bhwc,bhwo->co", patch, dy.astype(jnp.float32)))
+    return out

@@ -1,0 +1,67 @@
+"""Elastic re-meshing: bring a training job back on a different topology.
+
+Checkpoints are device-agnostic (checkpoint/manager.py); this module owns
+the other half of fault tolerance at pod scale: given the latest checkpoint
+and whatever devices the scheduler gives us NOW, rebuild the mesh, the
+shardings, and the compiled step — e.g. a 2-pod job resuming on 1 pod after
+a pod loss, or scaling 8 -> 16 hosts.
+
+    state, mesh, step_fn = resume_elastic(cfg, sync, ckpt_dir,
+                                          mesh_shape=(8,), axes=("data",))
+
+The per-step global batch is unchanged (the data pipeline is keyed by step
+count, not by device count), so loss curves continue exactly; only the
+per-device slice sizes change.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.chaos import SyncConfig
+from repro.core.types import ArchConfig
+from repro.train import sharding as SH
+from repro.train.step import (init_train_state, make_optimizer,
+                              make_train_step, state_specs)
+
+
+def make_mesh_from_available(mesh_shape: Optional[Sequence[int]] = None,
+                             axes: Sequence[str] = ("data", "model")):
+    """Build a mesh from the devices that exist right now.  Default: 1-D
+    data mesh over every live device (the maximally elastic layout)."""
+    devs = jax.devices()
+    if mesh_shape is None:
+        mesh_shape = (len(devs),)
+        axes = axes[:1]
+    return jax.make_mesh(tuple(mesh_shape), tuple(axes),
+                         devices=devs[:int(__import__("math").prod(mesh_shape))])
+
+
+def resume_elastic(cfg: ArchConfig, sync: SyncConfig, ckpt_dir: str,
+                   mesh_shape: Optional[Sequence[int]] = None,
+                   axes: Sequence[str] = ("data", "model"),
+                   optimizer=None):
+    """Restore the latest checkpoint under a freshly built mesh.
+
+    Returns (state, start_step, mesh, jit_step).  The restored arrays are
+    device_put with shardings derived for the NEW mesh — axes that no
+    longer divide (e.g. model=16 shrank to model=4) fall back per-dim via
+    shardings_for's divisibility rule.
+    """
+    optimizer = optimizer or make_optimizer(cfg)
+    mesh = make_mesh_from_available(mesh_shape, axes)
+    mgr = CheckpointManager(ckpt_dir)
+
+    with SH.use_mesh(mesh):
+        template = init_train_state(cfg, jax.random.key(0), sync, optimizer,
+                                    abstract=True)
+        specs = state_specs(cfg, sync, optimizer)
+        shardings = SH.shardings_for(specs, template, mesh)
+        state, start = mgr.restore(template, shardings=shardings)
+        step_fn = jax.jit(make_train_step(cfg, sync, optimizer),
+                          in_shardings=(shardings, None),
+                          out_shardings=(shardings, None),
+                          donate_argnums=(0,))
+    return state, start, mesh, step_fn

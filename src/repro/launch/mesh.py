@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level constant) so importing never touches jax device
+state.  Single pod: 16x16 = 256 chips (TPU v5e pod); multi-pod adds a
+leading pure-DP "pod" axis (2 x 256 = 512 chips).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n: int = None, axis: str = "workers"):
+    """1-D mesh over available (possibly forced-host) devices, for the
+    CHAOS worker-model runs and tests."""
+    devs = jax.devices()
+    n = n or len(devs)
+    return jax.make_mesh((n,), (axis,), devices=devs[:n])

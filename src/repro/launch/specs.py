@@ -1,0 +1,48 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+No device allocation — the dry-run lowers against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ArchConfig, SHAPES, ShapeConfig
+
+SKIP = "skip"
+
+
+def cell_status(cfg: ArchConfig, shape: ShapeConfig) -> str:
+    """'ok' or a skip reason, per the assignment rules."""
+    if shape.name == "long_500k" and not cfg.is_subquadratic:
+        return "skip: full attention is quadratic at 512k (DESIGN.md §5)"
+    return "ok"
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig):
+    """Returns a dict of ShapeDtypeStructs for train_step / serve_step."""
+    B, T = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((B, T), i32),
+            "labels": jax.ShapeDtypeStruct((B, T), i32),
+        }
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_frames, cfg.d_model), jnp.bfloat16)
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, T), i32)}
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_frames, cfg.d_model), jnp.bfloat16)
+        return batch
+    # decode: one new token against a cache of length T
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}

@@ -1,0 +1,86 @@
+"""Unified model API: dispatches on ``cfg.family``.
+
+    ops = get_ops(cfg)
+    params = ops.init(jax.random.key(0))          # real arrays
+    specs  = ops.param_specs()                     # logical PartitionSpec tree
+    loss, metrics = ops.loss(params, batch)
+    cache  = ops.init_cache(batch_size, max_seq)   # decode families
+    logits, cache = ops.decode(params, cache, tokens, cache_len)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ArchConfig
+from repro.models import layers as L
+
+
+@dataclasses.dataclass
+class ModelOps:
+    cfg: ArchConfig
+    init: Callable
+    param_specs: Callable
+    abstract_params: Callable
+    loss: Callable
+    init_cache: Optional[Callable] = None
+    abstract_cache: Optional[Callable] = None
+    cache_specs: Optional[Callable] = None
+    decode: Optional[Callable] = None
+    forward: Optional[Callable] = None
+
+
+def _mod(cfg: ArchConfig):
+    if cfg.family in ("dense", "mla", "moe", "vlm"):
+        from repro.models import lm
+        return lm
+    if cfg.family == "hybrid":
+        from repro.models import mamba2
+        return mamba2
+    if cfg.family == "ssm":
+        from repro.models import rwkv6
+        return rwkv6
+    if cfg.family == "encdec":
+        from repro.models import encdec
+        return encdec
+    if cfg.family == "cnn":
+        from repro.models import cnn
+        return cnn
+    raise ValueError(cfg.family)
+
+
+def get_ops(cfg: ArchConfig) -> ModelOps:
+    mod = _mod(cfg)
+    dtype = jnp.dtype(cfg.param_dtype)
+
+    def init(key):
+        return mod.build_params(cfg, L.InitFactory(key, dtype))
+
+    def param_specs():
+        return mod.build_params(cfg, L.SpecFactory())
+
+    def abstract_params():
+        return mod.build_params(cfg, L.ShapeFactory(dtype))
+
+    ops = ModelOps(
+        cfg=cfg, init=init, param_specs=param_specs,
+        abstract_params=abstract_params,
+        loss=lambda params, batch: mod.loss_fn(params, batch, cfg),
+        forward=getattr(mod, "forward", None) and (
+            lambda params, *a, **k: mod.forward(params, *a, cfg=cfg, **k)
+            if cfg.family != "cnn" else mod.forward(params, *a, cfg, **k)),
+    )
+    if hasattr(mod, "init_cache"):
+        cache_dtype = jnp.dtype("bfloat16")
+        ops.init_cache = lambda b, s: mod.init_cache(
+            cfg, b, s, L.InitFactory(jax.random.key(0), cache_dtype))
+        ops.abstract_cache = lambda b, s: mod.init_cache(
+            cfg, b, s, L.ShapeFactory(cache_dtype))
+        ops.cache_specs = lambda b, s: mod.init_cache(
+            cfg, b, s, L.SpecFactory())
+        ops.decode = lambda params, cache, tokens, cache_len: mod.decode_step(
+            params, cache, tokens, cache_len, cfg)
+    return ops

@@ -1,0 +1,111 @@
+"""The paper's CNNs (Table 2): conv/max-pool/fc stacks for 29x29 MNIST.
+
+Faithful to Cireşan-style nets used in the paper: valid convolutions,
+max-pooling, tanh hidden activations, softmax output, MSE-free CE loss,
+SGD with the paper's decay schedule (eta0=0.001, x0.9 per epoch).
+
+``use_kernel=True`` routes the convolutions through the Pallas TPU kernel
+(`repro.kernels.conv2d`) — the SIMD-vectorisation analogue (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ArchConfig
+
+
+def _trace_shapes(cfg: ArchConfig):
+    """Yield (kind, spec, h, c_in, c_out) per layer; h = output spatial."""
+    h = cfg.cnn_input[0]
+    c = 1
+    out = []
+    for spec in cfg.cnn_layers:
+        if spec[0] == "conv":
+            _, maps, k = spec
+            h = h - k + 1
+            out.append(("conv", k, h, c, maps))
+            c = maps
+        elif spec[0] == "pool":
+            _, k = spec
+            h = h // k
+            out.append(("pool", k, h, c, c))
+        else:
+            _, n = spec
+            out.append(("fc", None, n, c * h * h, n))
+            h, c = 1, n
+    out.append(("fc", None, cfg.n_classes, c * h * h if h > 1 else c,
+                cfg.n_classes))
+    return out
+
+
+def param_count(cfg: ArchConfig) -> int:
+    n = 0
+    for kind, k, _, cin, cout in _trace_shapes(cfg):
+        if kind == "conv":
+            n += k * k * cin * cout + cout
+        elif kind == "fc":
+            n += cin * cout + cout
+    return n
+
+
+def build_params(cfg: ArchConfig, f):
+    params = {}
+    for i, (kind, k, _, cin, cout) in enumerate(_trace_shapes(cfg)):
+        if kind == "conv":
+            params[f"conv{i}"] = {
+                "w": f.array((k, k, cin, cout), None,
+                             scale=1.0 / math.sqrt(k * k * cin)),
+                "b": f.array((cout,), None, mode="zeros"),
+            }
+        elif kind == "fc":
+            params[f"fc{i}"] = {
+                "w": f.array((cin, cout), ("fsdp", None),
+                             scale=1.0 / math.sqrt(cin)),
+                "b": f.array((cout,), None, mode="zeros"),
+            }
+    return params
+
+
+def forward(params, images, cfg: ArchConfig, use_kernel: bool = False):
+    """images: (B, H, W, 1) float32 in [0,1].  Returns (B, n_classes) logits."""
+    x = images
+    if use_kernel:
+        from repro.kernels import ops as kops
+    for i, (kind, k, _, cin, cout) in enumerate(_trace_shapes(cfg)):
+        if kind == "conv":
+            p = params[f"conv{i}"]
+            if use_kernel:
+                x = kops.conv2d_valid(x, p["w"]) + p["b"]
+            else:
+                x = jax.lax.conv_general_dilated(
+                    x, p["w"], (1, 1), "VALID",
+                    dimension_numbers=("NHWC", "HWIO", "NHWC")) + p["b"]
+            x = jnp.tanh(x)
+        elif kind == "pool":
+            if k > 1:
+                x = jax.lax.reduce_window(
+                    x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, k, k, 1),
+                    "VALID")
+        else:
+            p = params[f"fc{i}"]
+            if x.ndim > 2:
+                x = x.reshape(x.shape[0], -1)
+            x = x @ p["w"] + p["b"]
+            if i < len(_trace_shapes(cfg)) - 1:
+                x = jnp.tanh(x)
+    return x
+
+
+def loss_fn(params, batch, cfg: ArchConfig, use_kernel: bool = False):
+    logits = forward(params, batch["images"], cfg, use_kernel=use_kernel)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(lse - ll)
+    err = jnp.mean((jnp.argmax(logits, -1) != labels).astype(jnp.float32))
+    return loss, {"ce": loss, "error_rate": err,
+                  "aux": jnp.zeros((), jnp.float32)}

@@ -1,0 +1,209 @@
+"""Encoder-decoder transformer backbone (whisper-small).
+
+The conv/audio frontend is a STUB per the assignment: ``input_specs``
+supplies precomputed frame embeddings (B, enc_frames, d_model).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ArchConfig
+from repro.models import layers as L
+from repro.models.lm import _attn_params, _mlp_params
+from repro.train.sharding import constrain
+
+
+def _xattn_params(cfg: ArchConfig, f, shape0=()):
+    d, dh = cfg.d_model, cfg.d_head
+    Hq, Hkv = cfg.n_heads, cfg.n_kv_heads
+    ax = (None,) * len(shape0)
+    return {
+        "wq": f.array(shape0 + (d, Hq * dh), ax + ("fsdp", None)),
+        "wk": f.array(shape0 + (d, Hkv * dh), ax + ("fsdp", None)),
+        "wv": f.array(shape0 + (d, Hkv * dh), ax + ("fsdp", None)),
+        "wo": f.array(shape0 + (Hq * dh, d), ax + ("fsdp", None)),
+    }
+
+
+def build_params(cfg: ArchConfig, f):
+    Vp, d = cfg.padded_vocab, cfg.d_model
+    Le, Ld = cfg.n_enc_layers, cfg.n_layers
+    return {
+        "embed": f.array((Vp, d), ("tp", "fsdp"), scale=0.02),
+        "pos_dec": f.array((8192, d), (None, "fsdp"), scale=0.01),
+        "final_norm": f.array((d,), None, mode="ones"),
+        "enc_final_norm": f.array((d,), None, mode="ones"),
+        "enc_layers": {
+            "ln1": f.array((Le, d), None, mode="ones"),
+            "ln2": f.array((Le, d), None, mode="ones"),
+            "attn": _attn_params(cfg, f, (Le,)),
+            "mlp": _mlp_params(cfg, f, (Le,)),
+        },
+        "dec_layers": {
+            "ln1": f.array((Ld, d), None, mode="ones"),
+            "ln2": f.array((Ld, d), None, mode="ones"),
+            "ln3": f.array((Ld, d), None, mode="ones"),
+            "attn": _attn_params(cfg, f, (Ld,)),
+            "xattn": _xattn_params(cfg, f, (Ld,)),
+            "mlp": _mlp_params(cfg, f, (Ld,)),
+        },
+    }
+
+
+def _mha(p, xq, xkv, cfg, *, causal, positions=None, kv_cache=None,
+         cache_len=None):
+    B, Tq, d = xq.shape
+    dh, Hq, Hkv = cfg.d_head, cfg.n_heads, cfg.n_kv_heads
+    q = (xq @ p["wq"]).reshape(B, Tq, Hq, dh)
+    if kv_cache is not None and xkv is None:
+        # cross-attention decode: cached K/V, no new keys
+        k, v = kv_cache
+        o = L.decode_attention(q, k, v, k.shape[1])
+        return (o.reshape(B, Tq, Hq * dh)) @ p["wo"], kv_cache
+    Tk = xkv.shape[1]
+    k = (xkv @ p["wk"]).reshape(B, Tk, Hkv, dh)
+    v = (xkv @ p["wv"]).reshape(B, Tk, Hkv, dh)
+    if positions is not None:
+        q = L.rope(q, positions, cfg.rope_theta)
+        kpos = jnp.arange(Tk)[None, :] if cache_len is None else (
+            jnp.asarray(cache_len) + jnp.arange(Tk)[None, :])
+        k = L.rope(k, kpos, cfg.rope_theta)
+    if kv_cache is not None:  # self-attention decode
+        ck, cv = kv_cache
+        idx = jnp.asarray(cache_len)
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, idx, 0, 0))
+        o = L.decode_attention(q, ck, cv, cache_len + Tq)
+        return (o.reshape(B, Tq, Hq * dh)) @ p["wo"], (ck, cv)
+    q = constrain(q, "dp", "sp", None, None)
+    o = L.flash_attention(q, k, v, causal=causal)
+    return (o.reshape(B, Tq, Hq * dh)) @ p["wo"], None
+
+
+def encode(params, frames, cfg: ArchConfig):
+    """frames: (B, F, d_model) stub embeddings."""
+    x = constrain(frames, "dp", None, None)
+    Le = cfg.n_enc_layers
+
+    def body(h, lp):
+        def f(lp_, h_):
+            a, _ = _mha(lp_["attn"], L.rms_norm(h_, lp_["ln1"]),
+                        L.rms_norm(h_, lp_["ln1"]), cfg, causal=False)
+            h_ = h_ + a
+            h_ = h_ + L.swiglu(L.rms_norm(h_, lp_["ln2"]), lp_["mlp"]["w_gate"],
+                               lp_["mlp"]["w_up"], lp_["mlp"]["w_down"])
+            return constrain(h_, "dp", None, None)
+        if cfg.remat:
+            f = jax.checkpoint(f)
+        return f(lp, h), None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    else:
+        for i in range(Le):
+            lp = jax.tree.map(lambda a, i=i: a[i], params["enc_layers"])
+            x, _ = body(x, lp)
+    return L.rms_norm(x, params["enc_final_norm"])
+
+
+def _dec_block(lp, x, enc_out, cfg, positions, self_cache=None,
+               cross_cache=None, cache_len=None):
+    a, new_self = _mha(lp["attn"], L.rms_norm(x, lp["ln1"]),
+                       L.rms_norm(x, lp["ln1"]), cfg, causal=True,
+                       positions=positions, kv_cache=self_cache,
+                       cache_len=cache_len)
+    x = x + a
+    if cross_cache is not None:
+        a, _ = _mha(lp["xattn"], L.rms_norm(x, lp["ln2"]), None, cfg,
+                    causal=False, kv_cache=cross_cache)
+    else:
+        a, _ = _mha(lp["xattn"], L.rms_norm(x, lp["ln2"]), enc_out, cfg,
+                    causal=False)
+    x = x + a
+    x = x + L.swiglu(L.rms_norm(x, lp["ln3"]), lp["mlp"]["w_gate"],
+                     lp["mlp"]["w_up"], lp["mlp"]["w_down"])
+    return constrain(x, "dp", "sp", None), new_self
+
+
+def forward(params, tokens, frames, cfg: ArchConfig,
+            return_hidden: bool = False):
+    enc_out = encode(params, frames, cfg)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, "dp", "sp", None)
+    T = x.shape[1]
+    positions = jnp.arange(T)[None, :]
+
+    def body(h, lp):
+        def f(lp_, h_):
+            return _dec_block(lp_, h_, enc_out, cfg, positions)[0]
+        if cfg.remat:
+            f = jax.checkpoint(f)
+        return f(lp, h), None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    else:
+        f = lambda lp_, h_: _dec_block(lp_, h_, enc_out, cfg, positions)[0]
+        if cfg.remat:
+            f = jax.checkpoint(f)
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a, i=i: a[i], params["dec_layers"])
+            x = f(lp, x)
+    x = L.rms_norm(x, params["final_norm"])
+    if return_hidden:
+        return x, jnp.zeros((), jnp.float32)
+    logits = jnp.einsum("btd,vd->btv", x, params["embed"])
+    return constrain(logits, "dp", "sp", None), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, batch, cfg: ArchConfig):
+    x, aux = forward(params, batch["tokens"], batch["frames"], cfg,
+                     return_hidden=True)
+    ce = L.fused_ce(x, params["embed"], batch["labels"], cfg.vocab_size)
+    return ce, {"ce": ce, "aux": aux}
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, f):
+    Ld, dh, Hkv = cfg.n_layers, cfg.d_head, cfg.n_kv_heads
+    F = cfg.enc_frames
+    return {
+        "k": f.array((Ld, batch, max_seq, Hkv, dh),
+                     (None, "dp", "sp", None, None), mode="zeros"),
+        "v": f.array((Ld, batch, max_seq, Hkv, dh),
+                     (None, "dp", "sp", None, None), mode="zeros"),
+        "xk": f.array((Ld, batch, F, Hkv, dh),
+                      (None, "dp", None, None, None), mode="zeros"),
+        "xv": f.array((Ld, batch, F, Hkv, dh),
+                      (None, "dp", None, None, None), mode="zeros"),
+    }
+
+
+def decode_step(params, cache, tokens, cache_len, cfg: ArchConfig):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, "dp", "sp", None)
+    positions = jnp.full((1, 1), cache_len, jnp.int32)
+
+    def body(h, packed):
+        lp, k, v, xk, xv = packed
+        h, new_self = _dec_block(lp, h, None, cfg, positions,
+                                 self_cache=(k, v), cross_cache=(xk, xv),
+                                 cache_len=cache_len)
+        return h, new_self
+
+    if cfg.scan_layers:
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (params["dec_layers"], cache["k"], cache["v"],
+                      cache["xk"], cache["xv"]))
+    else:
+        nks, nvs = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["dec_layers"])
+            x, (k_, v_) = body(x, (lp, cache["k"][i], cache["v"][i],
+                                   cache["xk"][i], cache["xv"][i]))
+            nks.append(k_); nvs.append(v_)
+        nk, nv = jnp.stack(nks), jnp.stack(nvs)
+    x = L.rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("btd,vd->btv", x, params["embed"])
+    logits = constrain(logits, "dp", "sp", None)
+    return logits, {"k": nk, "v": nv, "xk": cache["xk"], "xv": cache["xv"]}

@@ -1,0 +1,354 @@
+"""Shared pure-JAX building blocks for the model zoo.
+
+Parameters are plain nested dicts.  A ``Factory`` abstraction lets the same
+model-construction code produce either real initialised arrays
+(``InitFactory``) or ``PartitionSpec`` trees (``SpecFactory``) so parameter
+trees and sharding trees can never drift apart.
+
+Logical sharding axes used throughout (mapped to mesh axes in
+``repro.train.sharding``):
+    "fsdp"  -> data axis (params sharded on contraction dims, ZeRO-3 style)
+    "tp"    -> model axis (tensor parallel: d_ff, vocab)
+    "ep"    -> model axis (expert parallel)
+    "sp"    -> model axis (sequence parallel activations)
+    None    -> replicated
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Param factories
+# ---------------------------------------------------------------------------
+class InitFactory:
+    """Creates initialised parameter arrays."""
+
+    def __init__(self, key: jax.Array, dtype):
+        self._key = key
+        self.dtype = dtype
+
+    def _next(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def array(self, shape, axes, *, scale: Optional[float] = None,
+              mode: str = "normal"):
+        del axes
+        if mode == "zeros":
+            return jnp.zeros(shape, self.dtype)
+        if mode == "ones":
+            return jnp.ones(shape, self.dtype)
+        if scale is None:
+            fan_in = shape[0] if len(shape) >= 2 else max(shape[-1], 1)
+            scale = 1.0 / math.sqrt(fan_in)
+        return (jax.random.normal(self._next(), shape, jnp.float32)
+                * scale).astype(self.dtype)
+
+
+class SpecFactory:
+    """Creates PartitionSpec leaves with the same tree structure."""
+
+    def __init__(self):
+        self.dtype = None
+
+    def array(self, shape, axes, **kw):
+        del kw
+        if axes is None:
+            return P()
+        assert len(axes) == len(shape), (shape, axes)
+        return P(*axes)
+
+
+class ShapeFactory:
+    """Creates ShapeDtypeStructs (for abstract init / dry-run)."""
+
+    def __init__(self, dtype):
+        self.dtype = dtype
+
+    def array(self, shape, axes, **kw):
+        del axes, kw
+        return jax.ShapeDtypeStruct(shape, self.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Numerics
+# ---------------------------------------------------------------------------
+def rms_norm(x, gamma, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * gamma.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(dt)
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding.  x: (..., T, H, D); positions: (..., T)."""
+    d = x.shape[-1]
+    assert d % 2 == 0
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(0, d // 2, dtype=jnp.float32)
+                    / (d // 2))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., T, D/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., T, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    g = x @ w_gate
+    u = x @ w_up
+    return (jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u) @ w_down
+
+
+# ---------------------------------------------------------------------------
+# Blockwise flash attention (pure jnp, online softmax over KV blocks).
+# Memory-bounded: never materialises the full (Tq, Tk) score matrix.
+#
+# UNROLL_ATTN: the dry-run sets this so the KV-block loop is unrolled into
+# straight-line HLO — XLA's HloCostAnalysis counts while-loop bodies ONCE,
+# so unrolling is required for honest roofline FLOP/byte accounting.
+# ---------------------------------------------------------------------------
+UNROLL_ATTN = False
+
+
+def _blocks(k, block_k):
+    B, Tk = k.shape[0], k.shape[1]
+    n_blocks = (Tk + block_k - 1) // block_k
+    pad = n_blocks * block_k - Tk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad)) + ((0, 0),) * (k.ndim - 2))
+    return k.reshape((B, n_blocks, block_k) + k.shape[2:]), n_blocks, pad
+
+
+def _block_mask(start, block_k, q_pos, Tk, causal, pad):
+    k_pos = start + jnp.arange(block_k)
+    if causal:
+        mask = k_pos[None, :] <= q_pos[:, None]
+    else:
+        mask = jnp.ones((q_pos.shape[0], block_k), bool)
+    if pad:
+        mask = mask & (k_pos[None, :] < Tk)
+    return mask
+
+
+def _loop(body, carry, xs_blocks, starts, n_blocks):
+    """scan or (under UNROLL_ATTN) an unrolled python loop."""
+    if UNROLL_ATTN:
+        ys = []
+        for i in range(n_blocks):
+            blk = tuple(x[:, i] for x in xs_blocks) + (i * starts,)
+            carry, y = body(carry, blk)
+            ys.append(y)
+        stacked = (None if ys[0] is None else
+                   jax.tree.map(lambda *a: jnp.stack(a, 1), *ys))
+        return carry, stacked
+    swapped = tuple(x.swapaxes(0, 1) for x in xs_blocks)
+    idx = jnp.arange(n_blocks) * starts
+    carry, ys = jax.lax.scan(body, carry, swapped + (idx,))
+    if ys is not None:
+        ys = jax.tree.map(lambda a: a.swapaxes(0, 1), ys)
+    return carry, ys
+
+
+def _flash_fwd_impl(q, k, v, causal, q_offset, block_k, scale):
+    B, Tq, Hq, D = q.shape
+    Tk, Hkv, Dv = k.shape[1], k.shape[2], v.shape[3]
+    G = Hq // Hkv
+    block_k = min(block_k, Tk)
+    kb, n_blocks, pad = _blocks(k, block_k)
+    vb, _, _ = _blocks(v, block_k)
+    qg = q.reshape(B, Tq, Hkv, G, D)
+    q_pos = q_offset + jnp.arange(Tq)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, start = blk
+        s = jnp.einsum("bthgd,bshd->bhgts", qg, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        mask = _block_mask(start, block_k, q_pos, Tk, causal, pad)
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        safe_m = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+        p = jnp.exp(s - safe_m[..., None]) * mask[None, None, None]
+        corr = jnp.exp(m - safe_m)  # m=-inf rows -> corr 0 (safe_m finite)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhgts,bshd->bhgtd", p.astype(vblk.dtype), vblk,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G, Tq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Tq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Tq, Dv), jnp.float32)
+    (m, l, acc), _ = _loop(body, (m0, l0, a0), (kb, vb), block_k, n_blocks)
+    l_safe = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows
+    out = acc / l_safe[..., None]
+    lse = m + jnp.log(l_safe)  # (B,Hkv,G,Tq)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Tq, Hq, Dv)
+    return out.astype(q.dtype), lse
+
+
+def _flash_fwd(q, k, v, causal, q_offset, block_k, scale):
+    out, lse = _flash_fwd_impl(q, k, v, causal, q_offset, block_k, scale)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, q_offset, block_k, scale, res, dout):
+    """Flash backward: recompute p per block from saved lse — O(T) memory."""
+    q, k, v, out, lse = res
+    B, Tq, Hq, D = q.shape
+    Tk, Hkv, Dv = k.shape[1], k.shape[2], v.shape[3]
+    G = Hq // Hkv
+    block_k = min(block_k, Tk)
+    kb, n_blocks, pad = _blocks(k, block_k)
+    vb, _, _ = _blocks(v, block_k)
+    qg = q.reshape(B, Tq, Hkv, G, D).astype(jnp.float32)
+    q_pos = q_offset + jnp.arange(Tq)
+    dog = dout.reshape(B, Tq, Hkv, G, Dv).astype(jnp.float32)
+    og = out.reshape(B, Tq, Hkv, G, Dv).astype(jnp.float32)
+    # D_i = sum_d do_i * o_i   (B,Hkv,G,Tq)
+    Dsum = jnp.einsum("bthgd,bthgd->bhgt", dog, og)
+
+    def body(dq_acc, blk):
+        kblk, vblk, start = blk
+        kf, vf = kblk.astype(jnp.float32), vblk.astype(jnp.float32)
+        s = jnp.einsum("bthgd,bshd->bhgts", qg, kf,
+                       preferred_element_type=jnp.float32) * scale
+        mask = _block_mask(start, block_k, q_pos, Tk, causal, pad)
+        # mask BEFORE exp: a masked score above lse would overflow and
+        # poison the 0-mask product with NaN
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        p = jnp.exp(s - lse[..., None])
+        dv_blk = jnp.einsum("bhgts,bthgd->bshd", p, dog)
+        dp = jnp.einsum("bthgd,bshd->bhgts", dog, vf)
+        ds = p * (dp - Dsum[..., None]) * scale
+        dq_acc = dq_acc + jnp.einsum("bhgts,bshd->bthgd", ds, kf)
+        dk_blk = jnp.einsum("bhgts,bthgd->bshd", ds, qg)
+        return dq_acc, (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros((B, Tq, Hkv, G, D), jnp.float32)
+    dq, (dk_blks, dv_blks) = _loop(body, dq0, (kb, vb), block_k, n_blocks)
+    dq = dq.reshape(B, Tq, Hq, D).astype(q.dtype)
+    dk = dk_blks.reshape(B, n_blocks * block_k, Hkv, D)[:, :Tk].astype(k.dtype)
+    dv = dv_blks.reshape(B, n_blocks * block_k, Hkv, Dv)[:, :Tk].astype(v.dtype)
+    return dq, dk, dv
+
+
+from functools import partial as _partial
+
+
+@_partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, q_offset, block_k, scale):
+    out, _ = _flash_fwd_impl(q, k, v, causal, q_offset, block_k, scale)
+    return out
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, causal: bool, q_offset: int = 0,
+                    block_k: int = 1024, softmax_scale: Optional[float] = None):
+    """Blockwise flash attention with a flash *backward* (custom VJP):
+    only (q, k, v, out, lse) are saved; per-block score matrices are
+    recomputed in the backward pass, so memory is O(T) not O(T^2).
+
+    q, k: (B, T, H, D); v: (B, Tk, Hkv, Dv).  GQA via head grouping;
+    supports Dv != D (MLA)."""
+    D = q.shape[-1]
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+    return _flash(q, k, v, causal, q_offset, block_k, scale)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *,
+                     softmax_scale: Optional[float] = None):
+    """Single-token decode.  q: (B, 1, Hq, D); caches: (B, S, Hkv, D).
+
+    Plain einsum + masked softmax — the seq dim of the cache is sharded over
+    the `model` mesh axis; GSPMD turns the max/sum reductions into cross-
+    shard collectives (flash-decode pattern).
+    """
+    B, _, Hq, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(S)
+    mask = pos[None, :] < jnp.asarray(cache_len).reshape(-1, 1)
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhgs,bshd->bhgd", (p / l).astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+def cross_entropy(logits, labels, vocab_size: Optional[int] = None):
+    """Mean token cross-entropy.  logits: (..., V) possibly padded.
+
+    The label log-prob is computed as sum(logits * one_hot) rather than a
+    gather so a vocab-sharded (TP) logits tensor never has to be
+    all-gathered — the contraction stays sharded and reduces locally.
+    """
+    logits = logits.astype(jnp.float32)
+    if vocab_size is not None and vocab_size < logits.shape[-1]:
+        # mask padded vocab tail (fusable — no materialised copy)
+        valid = jnp.arange(logits.shape[-1]) < vocab_size
+        logits = jnp.where(valid, logits, -1e30)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    oh = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.bfloat16)
+    ll = jnp.sum(logits * oh.astype(jnp.float32), axis=-1)
+    return jnp.mean(lse - ll)
+
+
+def fused_ce(x, out_embed, labels, vocab_size: Optional[int] = None,
+             n_chunks: int = 8):
+    """Output projection + cross-entropy fused over sequence chunks.
+
+    The (B, T, V) logits tensor is never fully materialised: each chunk
+    computes its own logits under jax.checkpoint (recomputed in backward),
+    bounding live logits memory to (B, T/n_chunks, V).
+    x: (B, T, d); out_embed: (V, d) (possibly vocab-padded).
+    """
+    from repro.train.sharding import constrain as _cst
+    B, T, d = x.shape
+    while T % n_chunks:
+        n_chunks -= 1
+    tc = T // n_chunks
+    # un-shard the seq dim here: chunking must not split a sharded dim
+    # (536MB for a 4k x 4k hidden — cheap vs. multi-GB logits)
+    x = _cst(x, "dp", None, None)
+
+    @jax.checkpoint
+    def chunk_loss(xc, lc):
+        logits = jnp.einsum("btd,vd->btv", xc, out_embed)
+        logits = _cst(logits, "dp", None, "tp")
+        return cross_entropy(logits, lc, vocab_size) * lc.size
+
+    xs = x.reshape(B, n_chunks, tc, d).swapaxes(0, 1)
+    ls = labels.reshape(B, n_chunks, tc).swapaxes(0, 1)
+    if UNROLL_ATTN:  # dry-run: unrolled for honest cost accounting
+        total = sum(chunk_loss(xs[i], ls[i]) for i in range(n_chunks))
+    else:
+        def body(acc, inp):
+            xc, lc = inp
+            return acc + chunk_loss(xc, lc), None
+        total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xs, ls))
+    return total / labels.size

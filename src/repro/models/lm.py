@@ -1,0 +1,390 @@
+"""Decoder-only LM covering the dense / MLA / MoE / VLM families.
+
+Single parameter layout: per-layer params are stacked along a leading
+``n_layers`` axis so the same tree works for ``lax.scan`` (production) and
+python-loop (smoke / unrolled dry-run) execution.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ArchConfig
+from repro.models import layers as L
+from repro.train.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+def _attn_params(cfg: ArchConfig, f, shape0=()):
+    d, dh = cfg.d_model, cfg.d_head
+    Hq, Hkv = cfg.n_heads, cfg.n_kv_heads
+    p = {
+        "wq": f.array(shape0 + (d, Hq * dh), (None,) * len(shape0) + ("fsdp", None)),
+        "wk": f.array(shape0 + (d, Hkv * dh), (None,) * len(shape0) + ("fsdp", None)),
+        "wv": f.array(shape0 + (d, Hkv * dh), (None,) * len(shape0) + ("fsdp", None)),
+        "wo": f.array(shape0 + (Hq * dh, d), (None,) * len(shape0) + ("fsdp", None)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = f.array(shape0 + (dh,), None, mode="ones")
+        p["k_norm"] = f.array(shape0 + (dh,), None, mode="ones")
+    return p
+
+
+def _mla_params(cfg: ArchConfig, f, shape0=()):
+    d, H = cfg.d_model, cfg.n_heads
+    rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, rot, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ax = (None,) * len(shape0)
+    return {
+        "w_dq": f.array(shape0 + (d, rq), ax + ("fsdp", None)),
+        "q_ln": f.array(shape0 + (rq,), None, mode="ones"),
+        "w_uq": f.array(shape0 + (rq, H * (nope + rot)), ax + (None, "tp")),
+        "w_dkv": f.array(shape0 + (d, rkv + rot), ax + ("fsdp", None)),
+        "kv_ln": f.array(shape0 + (rkv,), None, mode="ones"),
+        "w_uk": f.array(shape0 + (rkv, H * nope), ax + (None, "tp")),
+        "w_uv": f.array(shape0 + (rkv, H * vd), ax + (None, "tp")),
+        "wo": f.array(shape0 + (H * vd, d), ax + ("tp", "fsdp")),
+    }
+
+
+def _mlp_params(cfg: ArchConfig, f, shape0=()):
+    d, ff = cfg.d_model, cfg.d_ff
+    ax = (None,) * len(shape0)
+    return {
+        "w_gate": f.array(shape0 + (d, ff), ax + ("fsdp", "tp")),
+        "w_up": f.array(shape0 + (d, ff), ax + ("fsdp", "tp")),
+        "w_down": f.array(shape0 + (ff, d), ax + ("tp", "fsdp")),
+    }
+
+
+def _moe_params(cfg: ArchConfig, f, shape0=()):
+    d, ff, E = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    ax = (None,) * len(shape0)
+    return {
+        "router": f.array(shape0 + (d, E), ax + ("fsdp", None)),
+        "w_gate": f.array(shape0 + (E, d, ff), ax + ("ep", "fsdp", None)),
+        "w_up": f.array(shape0 + (E, d, ff), ax + ("ep", "fsdp", None)),
+        "w_down": f.array(shape0 + (E, ff, d), ax + ("ep", None, "fsdp")),
+    }
+
+
+def _layer_params(cfg: ArchConfig, f, shape0=()):
+    p = {"ln1": f.array(shape0 + (cfg.d_model,), None, mode="ones"),
+         "ln2": f.array(shape0 + (cfg.d_model,), None, mode="ones")}
+    if cfg.family == "mla":
+        p["attn"] = _mla_params(cfg, f, shape0)
+    else:
+        p["attn"] = _attn_params(cfg, f, shape0)
+    if cfg.family == "moe":
+        p["moe"] = _moe_params(cfg, f, shape0)
+    else:
+        p["mlp"] = _mlp_params(cfg, f, shape0)
+    return p
+
+
+def build_params(cfg: ArchConfig, f):
+    Vp, d = cfg.padded_vocab, cfg.d_model
+    params = {
+        "embed": f.array((Vp, d), ("tp", "fsdp"), scale=0.02),
+        "final_norm": f.array((d,), None, mode="ones"),
+        "layers": _layer_params(cfg, f, (cfg.n_layers,)),
+    }
+    if not cfg.tie_embeddings:
+        params["out_embed"] = f.array((Vp, d), ("tp", "fsdp"), scale=0.02)
+    if cfg.family == "vlm":
+        params["patch_proj"] = f.array((d, d), ("fsdp", None))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward pieces
+# ---------------------------------------------------------------------------
+def _gqa_attention(p, x, cfg: ArchConfig, positions, kv_cache=None,
+                   cache_len=None):
+    """Returns (out, new_kv) ; kv_cache: (k, v) each (B, S, Hkv, dh)."""
+    B, T, d = x.shape
+    dh, Hq, Hkv = cfg.d_head, cfg.n_heads, cfg.n_kv_heads
+    q = (x @ p["wq"]).reshape(B, T, Hq, dh)
+    k = (x @ p["wk"]).reshape(B, T, Hkv, dh)
+    v = (x @ p["wv"]).reshape(B, T, Hkv, dh)
+    if cfg.qk_norm:
+        q = L.rms_norm(q, p["q_norm"])
+        k = L.rms_norm(k, p["k_norm"])
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    if kv_cache is None:
+        q = constrain(q, "dp", "sp", None, None)
+        o = L.flash_attention(q, k, v, causal=True)
+        new_kv = None
+    else:
+        ck, cv = kv_cache
+        idx = jnp.asarray(cache_len)
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, idx, 0, 0))
+        ck = constrain(ck, "dp", "sp", None, None)
+        cv = constrain(cv, "dp", "sp", None, None)
+        o = L.decode_attention(q, ck, cv, cache_len + T)
+        new_kv = (ck, cv)
+    o = o.reshape(B, T, Hq * dh)
+    return o @ p["wo"], new_kv
+
+
+def _mla_attention(p, x, cfg: ArchConfig, positions, kv_cache=None,
+                   cache_len=None):
+    """MLA.  Cache holds the *compressed* kv latent + shared rope key.
+
+    Decode uses the absorbed formulation (q projected into latent space) so
+    per-step work is O(S * (r_kv + r_rope)) per head — the standard MLA
+    serving optimisation.
+    """
+    B, T, d = x.shape
+    H = cfg.n_heads
+    rkv, nope, rot, vd = (cfg.kv_lora_rank, cfg.qk_nope_dim,
+                          cfg.qk_rope_dim, cfg.v_head_dim)
+    cq = L.rms_norm(x @ p["w_dq"], p["q_ln"])
+    qfull = (cq @ p["w_uq"]).reshape(B, T, H, nope + rot)
+    q_nope, q_rope = qfull[..., :nope], qfull[..., nope:]
+    q_rope = L.rope(q_rope, positions, cfg.rope_theta)
+
+    dkv = x @ p["w_dkv"]
+    c_kv = L.rms_norm(dkv[..., :rkv], p["kv_ln"])  # (B,T,rkv)
+    k_rope = L.rope(dkv[..., rkv:][:, :, None, :], positions,
+                    cfg.rope_theta)[:, :, 0, :]  # shared across heads
+
+    scale = 1.0 / math.sqrt(nope + rot)
+    w_uk = p["w_uk"].reshape(rkv, H, nope)
+    w_uv = p["w_uv"].reshape(rkv, H, vd)
+
+    if kv_cache is None:
+        k_nope = jnp.einsum("btr,rhn->bthn", c_kv, w_uk)
+        v = jnp.einsum("btr,rhv->bthv", c_kv, w_uv)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, T, H, rot))],
+            axis=-1)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        q = constrain(q, "dp", "sp", None, None)
+        o = L.flash_attention(q, k, v, causal=True, softmax_scale=scale)
+        new_kv = None
+    else:
+        cc, cr = kv_cache  # (B,S,rkv), (B,S,rot)
+        idx = jnp.asarray(cache_len)
+        cc = jax.lax.dynamic_update_slice(cc, c_kv.astype(cc.dtype), (0, idx, 0))
+        cr = jax.lax.dynamic_update_slice(cr, k_rope.astype(cr.dtype), (0, idx, 0))
+        cc = constrain(cc, "dp", "sp", None)
+        cr = constrain(cr, "dp", "sp", None)
+        # absorbed: q_c = q_nope absorbed through w_uk  -> latent space
+        q_c = jnp.einsum("bthn,rhn->bthr", q_nope, w_uk)
+        s = (jnp.einsum("bthr,bsr->bhts", q_c.astype(jnp.float32),
+                        cc.astype(jnp.float32))
+             + jnp.einsum("bthr,bsr->bhts", q_rope.astype(jnp.float32),
+                          cr.astype(jnp.float32))) * scale
+        S = cc.shape[1]
+        mask = jnp.arange(S)[None, :] < (jnp.asarray(cache_len) + T)
+        s = jnp.where(mask[:, None, None, :] if mask.ndim == 2 else mask[None, None, None, :], s, -jnp.inf)
+        a = jax.nn.softmax(s, axis=-1)
+        o_c = jnp.einsum("bhts,bsr->bthr", a.astype(cc.dtype), cc)
+        o = jnp.einsum("bthr,rhv->bthv", o_c, w_uv)
+        new_kv = (cc, cr)
+    o = o.reshape(B, T, H * vd)
+    return o @ p["wo"], new_kv
+
+
+GROUP_TOKENS = 256
+
+
+def moe_block(p, x, cfg: ArchConfig):
+    """Grouped GShard-style top-k dispatch with capacity.  x: (B, T, d).
+
+    Token groups are formed by *splitting the sequence dim in place*
+    ((B, T, d) -> (B, T/g, g, d)) — a tile-compatible reshape under
+    (dp, sp) activation sharding, so no involuntary resharding.  The
+    position-in-expert cumsum stays group-local.  Experts are sharded over
+    `ep`; the xg->xe dispatch einsum is the (GSPMD-inserted) all-to-all.
+    Returns (y, aux_loss).
+    """
+    B, T, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    if T >= GROUP_TOKENS:
+        g = GROUP_TOKENS
+        nsub = T // g
+        xg = x.reshape(B, nsub, g, d)
+        xg = constrain(xg, "dp", "sp", None, None)
+    else:  # decode-sized: one group over the whole (tiny) token set
+        g = B * T
+        nsub = 1
+        xg = x.reshape(1, 1, g, d)
+
+    logits = jnp.einsum("bntd,de->bnte", xg, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_i = jax.lax.top_k(probs, K)  # (b,n,t,K)
+    gate_w = gate_w / jnp.clip(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    C = max(int(math.ceil(g * K / E * cfg.capacity_factor)), min(g, K))
+    # one-hot over experts per k: (b,n,t,K,E)
+    oh = jax.nn.one_hot(gate_i, E, dtype=jnp.float32)
+    # position of each (t,k) within its expert queue (cumsum is group-local)
+    pos = jnp.cumsum(oh.reshape(*oh.shape[:2], g * K, E), axis=2) - 1.0
+    pos = pos.reshape(oh.shape)
+    pos_k = jnp.sum(pos * oh, axis=-1)  # (b,n,t,K)
+    keep = pos_k < C
+    gate_w = gate_w * keep
+
+    # dispatch/combine tensors: (b,n,t,E,C); bf16 halves a2a volume
+    pos_oh = jax.nn.one_hot(pos_k.astype(jnp.int32), C,
+                            dtype=jnp.float32) * keep[..., None]
+    dispatch = jnp.einsum("bntke,bntkc->bntec", oh, pos_oh).astype(x.dtype)
+    combine = jnp.einsum("bntk,bntke,bntkc->bntec", gate_w, oh,
+                         pos_oh).astype(x.dtype)
+
+    xe = jnp.einsum("bntec,bntd->bnecd", dispatch, xg)
+    xe = constrain(xe, "dp", None, "ep", None, None)
+    h = jnp.einsum("bnecd,edf->bnecf", xe, p["w_gate"])
+    u = jnp.einsum("bnecd,edf->bnecf", xe, p["w_up"])
+    h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype) * u
+    ye = jnp.einsum("bnecf,efd->bnecd", h, p["w_down"])
+    ye = constrain(ye, "dp", None, "ep", None, None)
+    y = jnp.einsum("bntec,bnecd->bntd", combine, ye)
+
+    # load-balance aux loss (Switch):  E * sum_e f_e * P_e
+    me = probs.mean(axis=(1, 2))                    # (b,E)
+    ce = oh.sum(axis=3).mean(axis=(1, 2))           # fraction routed
+    aux = E * jnp.mean(jnp.sum(me * ce, axis=-1))
+    return y.reshape(B, T, d), aux
+
+
+def _block(p, x, cfg: ArchConfig, positions, kv_cache=None, cache_len=None):
+    attn_fn = _mla_attention if cfg.family == "mla" else _gqa_attention
+    a, new_kv = attn_fn(p["attn"], L.rms_norm(x, p["ln1"]), cfg, positions,
+                        kv_cache, cache_len)
+    x = x + a
+    h = L.rms_norm(x, p["ln2"])
+    if cfg.family == "moe":
+        m, aux = moe_block(p["moe"], h, cfg)
+    else:
+        m = L.swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                     p["mlp"]["w_down"])
+        aux = jnp.zeros((), jnp.float32)
+    x = x + m
+    x = constrain(x, "dp", "sp", None)
+    return x, aux, new_kv
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+def _stack_forward(params, x, cfg: ArchConfig, positions):
+    """Run all layers (training / prefill path, no cache)."""
+    if cfg.scan_layers:
+        def body(carry, lp):
+            h, aux = carry
+            f = lambda lp_, h_: _block(lp_, h_, cfg, positions)[:2]
+            if cfg.remat:
+                f = jax.checkpoint(f)
+            h, a = f(lp, h)
+            return (h, aux + a), None
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   params["layers"])
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        f = lambda lp_, h_: _block(lp_, h_, cfg, positions)[:2]
+        if cfg.remat:
+            f = jax.checkpoint(f)
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a, i=i: a[i], params["layers"])
+            x, a = f(lp, x)
+            aux = aux + a
+    return x, aux
+
+
+def embed_tokens(params, tokens, cfg: ArchConfig):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    return constrain(x, "dp", "sp", None)
+
+
+def logits_fn(params, x, cfg: ArchConfig):
+    out = params.get("out_embed", params["embed"])
+    logits = jnp.einsum("btd,vd->btv", x, out)
+    return constrain(logits, "dp", "sp", None)
+
+
+def forward(params, tokens, cfg: ArchConfig, patch_embeds=None,
+            return_hidden: bool = False):
+    """Training / prefill forward.  tokens: (B, T) int32."""
+    x = embed_tokens(params, tokens, cfg)
+    if cfg.family == "vlm" and patch_embeds is not None:
+        pe = patch_embeds @ params["patch_proj"]
+        x = jnp.concatenate([pe.astype(x.dtype), x], axis=1)
+    T = x.shape[1]
+    positions = jnp.arange(T)[None, :]
+    x, aux = _stack_forward(params, x, cfg, positions)
+    x = L.rms_norm(x, params["final_norm"])
+    if cfg.family == "vlm" and patch_embeds is not None:
+        x = x[:, patch_embeds.shape[1]:]
+    if return_hidden:
+        return x, aux
+    return logits_fn(params, x, cfg), aux
+
+
+def loss_fn(params, batch, cfg: ArchConfig):
+    x, aux = forward(params, batch["tokens"], cfg,
+                     patch_embeds=batch.get("patch_embeds"),
+                     return_hidden=True)
+    out = params.get("out_embed", params["embed"])
+    ce = L.fused_ce(x, out, batch["labels"], cfg.vocab_size)
+    return ce + 0.01 * aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, f):
+    if cfg.family == "mla":
+        per_layer = {
+            "c_kv": f.array((cfg.n_layers, batch, max_seq, cfg.kv_lora_rank),
+                            (None, "dp", "sp", None), mode="zeros"),
+            "k_rope": f.array((cfg.n_layers, batch, max_seq, cfg.qk_rope_dim),
+                              (None, "dp", "sp", None), mode="zeros"),
+        }
+    else:
+        shp = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.d_head)
+        per_layer = {
+            "k": f.array(shp, (None, "dp", "sp", None, None), mode="zeros"),
+            "v": f.array(shp, (None, "dp", "sp", None, None), mode="zeros"),
+        }
+    return per_layer
+
+
+def _cache_pair(cache, cfg):
+    return ("c_kv", "k_rope") if cfg.family == "mla" else ("k", "v")
+
+
+def decode_step(params, cache, tokens, cache_len, cfg: ArchConfig):
+    """One decode step.  tokens: (B, 1).  Returns (logits, new_cache)."""
+    x = embed_tokens(params, tokens, cfg)
+    positions = jnp.full((1, 1), cache_len, jnp.int32)
+    k1, k2 = _cache_pair(cache, cfg)
+    aux = jnp.zeros((), jnp.float32)
+
+    if cfg.scan_layers:
+        def body(h, packed):
+            lp, c1, c2 = packed
+            h, a, new_kv = _block(lp, h, cfg, positions, (c1, c2), cache_len)
+            return h, new_kv
+        x, (nk1, nk2) = jax.lax.scan(body, x,
+                                     (params["layers"], cache[k1], cache[k2]))
+    else:
+        nk1s, nk2s = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, a, new_kv = _block(lp, x, cfg, positions,
+                                  (cache[k1][i], cache[k2][i]), cache_len)
+            nk1s.append(new_kv[0]); nk2s.append(new_kv[1])
+        nk1, nk2 = jnp.stack(nk1s), jnp.stack(nk2s)
+    x = L.rms_norm(x, params["final_norm"])
+    logits = logits_fn(params, x, cfg)
+    return logits, {k1: nk1, k2: nk2}

@@ -1,0 +1,313 @@
+"""Mamba2 (SSD) block + Zamba2-style hybrid stack.
+
+Training/prefill uses the chunked SSD algorithm (intra-chunk quadratic +
+inter-chunk linear state scan) — O(T * Q) work, linear in sequence length,
+which is what makes the hybrid archs eligible for the long_500k cell.
+Decode is a plain recurrent state update.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ArchConfig
+from repro.models import layers as L
+from repro.models.lm import _attn_params, _gqa_attention, _mlp_params
+from repro.train.sharding import constrain
+
+# SSD chunk length: the intra-chunk decay tensor is (B, T/Q, Q, Q, H) f32,
+# i.e. linear in Q - 64 keeps it ~0.5GB/layer-transient at train_4k scale.
+CHUNK = 64
+
+
+def mamba_params(cfg: ArchConfig, f, shape0=()):
+    d = cfg.d_model
+    din = d * cfg.ssm_expand
+    N = cfg.ssm_state
+    H = max(din // 64, 1)  # ssm heads (headdim 64)
+    ax = (None,) * len(shape0)
+    return {
+        # in_proj -> [x, z(gate), B, C, dt]
+        "w_in": f.array(shape0 + (d, 2 * din + 2 * N + H), ax + ("fsdp", "tp")),
+        "conv_w": f.array(shape0 + (cfg.ssm_conv, din), ax + (None, "tp")),
+        "A_log": f.array(shape0 + (H,), None, mode="zeros"),
+        "D": f.array(shape0 + (H,), None, mode="ones"),
+        "dt_bias": f.array(shape0 + (H,), None, mode="zeros"),
+        "w_out": f.array(shape0 + (din, d), ax + ("tp", "fsdp")),
+        "ln": f.array(shape0 + (d,), None, mode="ones"),
+    }
+
+
+def _split_in(p, x, cfg):
+    d = cfg.d_model
+    din = d * cfg.ssm_expand
+    N = cfg.ssm_state
+    H = max(din // 64, 1)
+    proj = x @ p["w_in"]
+    xs, z, B_, C_, dt = jnp.split(
+        proj, [din, 2 * din, 2 * din + N, 2 * din + 2 * N], axis=-1)
+    return xs, z, B_, C_, dt, din, N, H
+
+
+def _causal_conv(xs, conv_w, state=None):
+    """Depthwise causal conv.  xs: (B,T,din); conv_w: (K,din)."""
+    K = conv_w.shape[0]
+    if state is None:
+        pad = jnp.pad(xs, ((0, 0), (K - 1, 0), (0, 0)))
+        new_state = None
+    else:  # decode: state (B,K-1,din)
+        pad = jnp.concatenate([state, xs], axis=1)
+        new_state = pad[:, -(K - 1):]
+    out = sum(pad[:, i:i + xs.shape[1]] * conv_w[i] for i in range(K))
+    return jax.nn.silu(out.astype(jnp.float32)).astype(xs.dtype), new_state
+
+
+HEAD_BLOCK = 16
+
+
+def ssd_chunked(xh, dt, A, B_, C_, D):
+    """Chunked SSD.  xh: (B,T,H,P), dt: (B,T,H), A: (H,) (negative),
+    B_, C_: (B,T,N).  Returns (B,T,H,P).
+
+    Heads are processed in blocks of HEAD_BLOCK: the intra-chunk decay /
+    score tensors are (B, T/Q, Q, Q, h) f32 - blocking h bounds the
+    transient (python loop, so dry-run cost accounting stays honest)."""
+    H_all = xh.shape[2]
+    if H_all > HEAD_BLOCK:
+        outs = []
+        for h0 in range(0, H_all, HEAD_BLOCK):
+            sl = slice(h0, h0 + HEAD_BLOCK)
+            outs.append(_ssd_chunked_hblock(
+                xh[:, :, sl], dt[:, :, sl], A[sl], B_, C_, D[sl]))
+        return jnp.concatenate(outs, axis=2)
+    return _ssd_chunked_hblock(xh, dt, A, B_, C_, D)
+
+
+def _ssd_chunked_hblock(xh, dt, A, B_, C_, D):
+    Bsz, T, H, Pd = xh.shape
+    N = B_.shape[-1]
+    Q = min(CHUNK, T)
+    nC = T // Q
+    f32 = jnp.float32
+
+    dt = jax.nn.softplus(dt.astype(f32))                 # (B,T,H)
+    dA = dt * A.astype(f32)                              # log-decay per step
+    x_dt = xh.astype(f32) * dt[..., None]
+
+    # reshape into chunks
+    def ck(t):
+        return t.reshape(t.shape[0], nC, Q, *t.shape[2:])
+    xc, dAc, Bc, Cc = ck(x_dt), ck(dA), ck(B_.astype(f32)), ck(C_.astype(f32))
+
+    seg = jnp.cumsum(dAc, axis=2)                        # (B,nC,Q,H)
+    # intra-chunk: scores[i,j] = C_i . B_j * exp(seg_i - seg_j), j<=i
+    decay = seg[:, :, :, None, :] - seg[:, :, None, :, :]   # (B,nC,Q,Q,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(mask[None, None, :, :, None], decay, -jnp.inf)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)
+    M = cb[..., None] * jnp.exp(decay)                   # (B,nC,Q,Q,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xc)
+
+    # chunk states: S_c = sum_j exp(seg_last - seg_j) B_j x_j^T
+    last = seg[:, :, -1:, :]                             # (B,nC,1,H)
+    w = jnp.exp(last - seg)                              # (B,nC,Q,H)
+    S_c = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", Bc, w, xc)
+
+    # inter-chunk scan over nC states
+    chunk_decay = jnp.exp(last[:, :, 0, :])              # (B,nC,H)
+
+    def scan_body(S_prev, inp):
+        dec, Sc = inp
+        S = S_prev * dec[..., None, None] + Sc
+        return S, S_prev
+    S0 = jnp.zeros((Bsz, H, N, Pd), f32)
+    _, S_prevs = jax.lax.scan(
+        scan_body, S0,
+        (chunk_decay.swapaxes(0, 1), S_c.swapaxes(0, 1)))
+    S_prevs = S_prevs.swapaxes(0, 1)                     # (B,nC,H,N,P)
+
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp",
+                         Cc, jnp.exp(seg), S_prevs)
+    y = (y_intra + y_inter).reshape(Bsz, T, H, Pd)
+    y = y + xh.astype(f32) * D.astype(f32)[None, None, :, None]
+    return y.astype(xh.dtype)
+
+
+def mamba_block(p, x, cfg: ArchConfig, ssm_state=None, conv_state=None):
+    """Returns (y, new_ssm_state, new_conv_state)."""
+    B, T, d = x.shape
+    xs, z, B_, C_, dt, din, N, H = _split_in(p, x, cfg)
+    Pd = din // H
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    if ssm_state is None:  # train / prefill
+        xs, _ = _causal_conv(xs, p["conv_w"])
+        xh = xs.reshape(B, T, H, Pd)
+        y = ssd_chunked(xh, dt + p["dt_bias"], A, B_, C_, p["D"])
+        new_ssm, new_conv = None, None
+    else:  # decode (T == 1)
+        xs, new_conv = _causal_conv(xs, p["conv_w"], conv_state)
+        xh = xs.reshape(B, T, H, Pd)[:, 0]               # (B,H,P)
+        dtv = jax.nn.softplus((dt + p["dt_bias"])[:, 0].astype(jnp.float32))
+        dA = jnp.exp(dtv * A)                            # (B,H)
+        Bv, Cv = B_[:, 0].astype(jnp.float32), C_[:, 0].astype(jnp.float32)
+        upd = jnp.einsum("bh,bn,bhp->bhnp", dtv, Bv, xh.astype(jnp.float32))
+        new_ssm = ssm_state * dA[..., None, None] + upd
+        y = jnp.einsum("bn,bhnp->bhp", Cv, new_ssm)
+        y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, :, None]
+        y = y.reshape(B, 1, din).astype(x.dtype)
+        xh = None
+    if ssm_state is None:
+        y = y.reshape(B, T, din)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    return y @ p["w_out"], new_ssm, new_conv
+
+
+# ---------------------------------------------------------------------------
+# Zamba2-style hybrid stack: mamba blocks + ONE shared attention block
+# inserted every cfg.attn_every layers (attention weights reused each time).
+# ---------------------------------------------------------------------------
+def build_params(cfg: ArchConfig, f):
+    Vp, d = cfg.padded_vocab, cfg.d_model
+    params = {
+        "embed": f.array((Vp, d), ("tp", "fsdp"), scale=0.02),
+        "out_embed": f.array((Vp, d), ("tp", "fsdp"), scale=0.02),
+        "final_norm": f.array((d,), None, mode="ones"),
+        "layers": mamba_params(cfg, f, (cfg.n_layers,)),
+        "shared_attn": {
+            "ln": f.array((d,), None, mode="ones"),
+            **_attn_params(cfg, f),
+        },
+        "shared_mlp": {
+            "ln": f.array((d,), None, mode="ones"),
+            **_mlp_params(cfg, f),
+        },
+    }
+    return params
+
+
+def _attn_sites(cfg: ArchConfig):
+    return set(range(cfg.attn_every - 1, cfg.n_layers, cfg.attn_every))
+
+
+def forward(params, tokens, cfg: ArchConfig, patch_embeds=None,
+            return_hidden: bool = False):
+    """Hybrid stack.  The heterogeneous interleave (attn_every-1 mamba
+    blocks + one shared-attention block) is scanned over *groups*, so the
+    saved backward residuals are one carry per group rather than one per
+    layer — this is what keeps the 38-layer train_4k cell inside HBM."""
+    del patch_embeds
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, "dp", "sp", None)
+    T = x.shape[1]
+    positions = jnp.arange(T)[None, :]
+    sites = _attn_sites(cfg)
+
+    def mamba_f(lp, h):
+        y, _, _ = mamba_block(lp, L.rms_norm(h, lp["ln"]), cfg)
+        return h + y
+
+    def shared_f(h):
+        sa = params["shared_attn"]
+        a, _ = _gqa_attention(sa, L.rms_norm(h, sa["ln"]), cfg, positions)
+        h = h + a
+        sm = params["shared_mlp"]
+        h = h + L.swiglu(L.rms_norm(h, sm["ln"]), sm["w_gate"],
+                         sm["w_up"], sm["w_down"])
+        return constrain(h, "dp", "sp", None)
+
+    P = max(cfg.attn_every, 1)
+    G = cfg.n_layers // P
+
+    def group_f(gp, h):
+        for i in range(P):
+            lp = jax.tree.map(lambda a, i=i: a[i], gp)
+            h = mamba_f(lp, h)
+        return shared_f(h)
+
+    if cfg.remat:
+        group_f = jax.checkpoint(group_f)
+        mamba_tail = jax.checkpoint(mamba_f)
+    else:
+        mamba_tail = mamba_f
+
+    if cfg.scan_layers and G > 0:
+        grouped = jax.tree.map(
+            lambda a: a[:G * P].reshape((G, P) + a.shape[1:]),
+            params["layers"])
+
+        def body(h, gp):
+            return group_f(gp, h), None
+        x, _ = jax.lax.scan(body, x, grouped)
+        tail = range(G * P, cfg.n_layers)
+    else:
+        tail = range(cfg.n_layers)
+
+    for i in tail:
+        lp = jax.tree.map(lambda a, i=i: a[i], params["layers"])
+        x = mamba_tail(lp, x)
+        if i in sites:
+            x = shared_f(x)
+        x = constrain(x, "dp", "sp", None)
+    x = L.rms_norm(x, params["final_norm"])
+    if return_hidden:
+        return x, jnp.zeros((), jnp.float32)
+    logits = jnp.einsum("btd,vd->btv", x, params["out_embed"])
+    return constrain(logits, "dp", "sp", None), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, batch, cfg: ArchConfig):
+    x, aux = forward(params, batch["tokens"], cfg, return_hidden=True)
+    ce = L.fused_ce(x, params["out_embed"], batch["labels"], cfg.vocab_size)
+    return ce, {"ce": ce, "aux": aux}
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, f):
+    d = cfg.d_model
+    din = d * cfg.ssm_expand
+    N = cfg.ssm_state
+    H = max(din // 64, 1)
+    n_attn = len(_attn_sites(cfg))
+    return {
+        "ssm": f.array((cfg.n_layers, batch, H, N, din // H),
+                       (None, "dp", None, None, None), mode="zeros"),
+        "conv": f.array((cfg.n_layers, batch, cfg.ssm_conv - 1, din),
+                        (None, "dp", None, "tp"), mode="zeros"),
+        # shared-attention KV caches (one per attention site)
+        "k": f.array((n_attn, batch, max_seq, cfg.n_kv_heads, cfg.d_head),
+                     (None, "dp", "sp", None, None), mode="zeros"),
+        "v": f.array((n_attn, batch, max_seq, cfg.n_kv_heads, cfg.d_head),
+                     (None, "dp", "sp", None, None), mode="zeros"),
+    }
+
+
+def decode_step(params, cache, tokens, cache_len, cfg: ArchConfig):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, "dp", "sp", None)
+    positions = jnp.full((1, 1), cache_len, jnp.int32)
+    sites = sorted(_attn_sites(cfg))
+    new_ssm, new_conv, new_k, new_v = [], [], [], []
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[i], params["layers"])
+        y, s, c = mamba_block(lp, L.rms_norm(x, lp["ln"]), cfg,
+                              cache["ssm"][i], cache["conv"][i])
+        x = x + y
+        new_ssm.append(s); new_conv.append(c)
+        if i in sites:
+            j = sites.index(i)
+            sa = params["shared_attn"]
+            a, (nk, nv) = _gqa_attention(sa, L.rms_norm(x, sa["ln"]), cfg,
+                                         positions,
+                                         (cache["k"][j], cache["v"][j]),
+                                         cache_len)
+            x = x + a
+            sm = params["shared_mlp"]
+            x = x + L.swiglu(L.rms_norm(x, sm["ln"]), sm["w_gate"],
+                             sm["w_up"], sm["w_down"])
+            new_k.append(nk); new_v.append(nv)
+    x = L.rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("btd,vd->btv", x, params["out_embed"])
+    logits = constrain(logits, "dp", "sp", None)
+    return logits, {"ssm": jnp.stack(new_ssm), "conv": jnp.stack(new_conv),
+                    "k": jnp.stack(new_k), "v": jnp.stack(new_v)}

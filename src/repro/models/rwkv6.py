@@ -1,0 +1,239 @@
+"""RWKV-6 (Finch): attention-free LM with data-dependent decay.
+
+Per head h with state S in R^{D x D}:
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+where w_t = exp(-exp(wx_t)) is the data-dependent decay (token-shift + LoRA).
+
+Training uses a chunked formulation (parallel within chunks of size Q,
+sequential scan over T/Q chunks) — linear in T, so rwkv6 runs long_500k.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ArchConfig
+from repro.models import layers as L
+from repro.train.sharding import constrain
+
+CHUNK = 64
+LORA = 64
+
+
+def build_params(cfg: ArchConfig, f):
+    Vp, d = cfg.padded_vocab, cfg.d_model
+    H = cfg.n_heads
+    D = cfg.d_head
+    Lr = LORA
+    ax0 = (None,)
+    lay = {
+        "ln1": f.array((cfg.n_layers, d), None, mode="ones"),
+        "ln2": f.array((cfg.n_layers, d), None, mode="ones"),
+        # token-shift mixing coefficients
+        "mu_r": f.array((cfg.n_layers, d), None, mode="ones"),
+        "mu_k": f.array((cfg.n_layers, d), None, mode="ones"),
+        "mu_v": f.array((cfg.n_layers, d), None, mode="ones"),
+        "mu_w": f.array((cfg.n_layers, d), None, mode="ones"),
+        "w_r": f.array((cfg.n_layers, d, H * D), ax0 + ("fsdp", "tp")),
+        "w_k": f.array((cfg.n_layers, d, H * D), ax0 + ("fsdp", "tp")),
+        "w_v": f.array((cfg.n_layers, d, H * D), ax0 + ("fsdp", "tp")),
+        "w_o": f.array((cfg.n_layers, H * D, d), ax0 + ("tp", "fsdp")),
+        # data-dependent decay LoRA: d -> Lr -> H*D
+        "w_dec1": f.array((cfg.n_layers, d, Lr), ax0 + ("fsdp", None)),
+        "w_dec2": f.array((cfg.n_layers, Lr, H * D), ax0 + (None, "tp")),
+        "dec_bias": f.array((cfg.n_layers, H * D), None, mode="zeros"),
+        "u": f.array((cfg.n_layers, H, D), None, mode="zeros"),
+        "g_norm": f.array((cfg.n_layers, H * D), None, mode="ones"),
+        # channel-mix FFN (relu^2)
+        "fk": f.array((cfg.n_layers, d, cfg.d_ff), ax0 + ("fsdp", "tp")),
+        "fv": f.array((cfg.n_layers, cfg.d_ff, d), ax0 + ("tp", "fsdp")),
+        "fr": f.array((cfg.n_layers, d, d), ax0 + ("fsdp", None)),
+        "mu_fk": f.array((cfg.n_layers, d), None, mode="ones"),
+        "mu_fr": f.array((cfg.n_layers, d), None, mode="ones"),
+    }
+    return {
+        "embed": f.array((Vp, d), ("tp", "fsdp"), scale=0.02),
+        "out_embed": f.array((Vp, d), ("tp", "fsdp"), scale=0.02),
+        "final_norm": f.array((d,), None, mode="ones"),
+        "layers": lay,
+    }
+
+
+def _token_shift(x, prev=None):
+    """Shift sequence right by one.  prev: (B,1,d) last token of prior state."""
+    if prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def wkv_chunked(r, k, v, w, u):
+    """Chunked WKV.  r,k,v: (B,T,H,D); w: (B,T,H,D) decay in (0,1);
+    u: (H,D) bonus.  Returns (B,T,H,D), final_state (B,H,D,D)."""
+    B, T, H, D = r.shape
+    Q = min(CHUNK, T)
+    nC = T // Q
+    f32 = jnp.float32
+    r, k, v, w = (t.astype(f32) for t in (r, k, v, w))
+    logw = jnp.log(jnp.clip(w, 1e-12))                   # (B,T,H,D)
+
+    def ck(t):
+        return t.reshape(B, nC, Q, H, D)
+    rc, kc, vc, lwc = ck(r), ck(k), ck(v), ck(logw)
+    seg = jnp.cumsum(lwc, axis=2)                        # inclusive cumsum
+
+    # intra-chunk:
+    #   y_i += sum_{j<i} r_i . (prod_{j<m<i} w_m) k_j v_j + (u * k_i . r_i) v_i
+    # contribution factor exp(seg_{i-1} - seg_j); decay logs are clamped in
+    # _time_mix so exp(-seg) stays finite in f32 for Q=64 (see module doc).
+    ri = rc * jnp.exp(seg - lwc)                         # exp(seg_{i-1})
+    kj = kc * jnp.exp(-seg)                              # exp(-seg_j)
+    att = jnp.einsum("bcihd,bcjhd->bchij", ri, kj)
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=-1)
+    att = att * mask[None, None, None]
+    y_intra = jnp.einsum("bchij,bcjhd->bcihd", att, vc)
+    bonus = jnp.einsum("bcihd,hd,bcihd->bcih", rc, u.astype(f32), kc)
+    y_intra = y_intra + bonus[..., None] * vc
+
+    # chunk states: S_c = sum_j (prod_{m=j+1..Q-1} w_m) k_j^T v_j
+    wj = jnp.exp(seg[:, :, -1:, :, :] - seg)
+    S_c = jnp.einsum("bcjhd,bcjhe->bchde", kc * wj, vc)
+    chunk_decay = jnp.exp(seg[:, :, -1])                 # (B,nC,H,D)
+
+    def scan_body(S_prev, inp):
+        dec, Sc = inp
+        return S_prev * dec[..., None] + Sc, S_prev
+    S0 = jnp.zeros((B, H, D, D), f32)
+    S_last, S_prevs = jax.lax.scan(
+        scan_body, S0, (chunk_decay.swapaxes(0, 1), S_c.swapaxes(0, 1)))
+    S_prevs = S_prevs.swapaxes(0, 1)                     # (B,nC,H,D,D)
+
+    # inter-chunk: y_i += (r_i * prod_{m=0..i-1} w_m) S_prev
+    y_inter = jnp.einsum("bcihd,bchde->bcihe", ri, S_prevs)
+    y = (y_intra + y_inter).reshape(B, T, H, D)
+    return y, S_last
+
+
+def _time_mix(lp, x, prev_tok, state, cfg):
+    """RWKV6 time-mix.  state: None (train) or (B,H,D,D)."""
+    B, T, d = x.shape
+    H, D = cfg.n_heads, cfg.d_head
+    xs = _token_shift(x, prev_tok)
+    def mix(mu):
+        return x * mu + xs * (1 - mu)
+    r = (mix(lp["mu_r"]) @ lp["w_r"]).reshape(B, T, H, D)
+    k = (mix(lp["mu_k"]) @ lp["w_k"]).reshape(B, T, H, D)
+    v = (mix(lp["mu_v"]) @ lp["w_v"]).reshape(B, T, H, D)
+    dec = jax.nn.tanh(mix(lp["mu_w"]) @ lp["w_dec1"]) @ lp["w_dec2"]
+    dec = dec + lp["dec_bias"]
+    # clamp exp(dec) <= 1 so per-step log-decay >= -1; over a CHUNK of 64 the
+    # rescaling factor exp(-seg) <= e^64 stays finite in float32.
+    dec = jnp.clip(dec.astype(jnp.float32), None, 0.0)
+    w = jnp.exp(-jnp.exp(dec)).reshape(B, T, H, D)
+    if state is None:
+        y, S_last = wkv_chunked(r, k, v, w, lp["u"])
+    else:  # decode: T == 1
+        r1, k1, v1, w1 = (t[:, 0].astype(jnp.float32) for t in (r, k, v, w))
+        kv = jnp.einsum("bhd,bhe->bhde", k1, v1)
+        y = jnp.einsum("bhd,bhde->bhe",
+                       r1, state + lp["u"].astype(jnp.float32)[None, :, :, None] * kv)
+        S_last = state * w1[..., None] + kv
+        y = y[:, None]
+    y = y.reshape(B, T, H * D)
+    y = L.rms_norm(y, lp["g_norm"]).astype(x.dtype)
+    return y @ lp["w_o"], S_last
+
+
+def _channel_mix(lp, x, prev_tok):
+    xs = _token_shift(x, prev_tok)
+    xk = x * lp["mu_fk"] + xs * (1 - lp["mu_fk"])
+    xr = x * lp["mu_fr"] + xs * (1 - lp["mu_fr"])
+    h = jnp.square(jax.nn.relu(xk @ lp["fk"]))
+    return jax.nn.sigmoid((xr @ lp["fr"]).astype(jnp.float32)).astype(x.dtype) * (h @ lp["fv"])
+
+
+def _layer(lp, x, cfg, tm_prev=None, cm_prev=None, state=None):
+    a, S = _time_mix(lp, L.rms_norm(x, lp["ln1"]), tm_prev, state, cfg)
+    x = x + a
+    x = x + _channel_mix(lp, L.rms_norm(x, lp["ln2"]), cm_prev)
+    return constrain(x, "dp", "sp", None), S
+
+
+def forward(params, tokens, cfg: ArchConfig, patch_embeds=None,
+            return_hidden: bool = False):
+    del patch_embeds
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, "dp", "sp", None)
+
+    def body(h, lp):
+        f = lambda lp_, h_: _layer(lp_, h_, cfg)[0]
+        if cfg.remat:
+            f = jax.checkpoint(f)
+        return f(lp, h), None
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    else:
+        f = lambda lp_, h_: _layer(lp_, h_, cfg)[0]
+        if cfg.remat:
+            f = jax.checkpoint(f)
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a, i=i: a[i], params["layers"])
+            x = f(lp, x)
+    x = L.rms_norm(x, params["final_norm"])
+    if return_hidden:
+        return x, jnp.zeros((), jnp.float32)
+    logits = jnp.einsum("btd,vd->btv", x, params["out_embed"])
+    return constrain(logits, "dp", "sp", None), jnp.zeros((), jnp.float32)
+
+
+def loss_fn(params, batch, cfg: ArchConfig):
+    x, aux = forward(params, batch["tokens"], cfg, return_hidden=True)
+    ce = L.fused_ce(x, params["out_embed"], batch["labels"], cfg.vocab_size)
+    return ce, {"ce": ce, "aux": aux}
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, f):
+    H, D, d = cfg.n_heads, cfg.d_head, cfg.d_model
+    return {
+        "wkv": f.array((cfg.n_layers, batch, H, D, D),
+                       (None, "dp", None, None, None), mode="zeros"),
+        "tm_x": f.array((cfg.n_layers, batch, 1, d),
+                        (None, "dp", None, None), mode="zeros"),
+        "cm_x": f.array((cfg.n_layers, batch, 1, d),
+                        (None, "dp", None, None), mode="zeros"),
+    }
+
+
+def decode_step(params, cache, tokens, cache_len, cfg: ArchConfig):
+    del cache_len
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, "dp", "sp", None)
+
+    def body(h, packed):
+        lp, wkv, tm_x, cm_x = packed
+        h_in = h
+        n1 = L.rms_norm(h, lp["ln1"])
+        a, S = _time_mix(lp, n1, tm_x, wkv, cfg)
+        h = h + a
+        n2 = L.rms_norm(h, lp["ln2"])
+        h = h + _channel_mix(lp, n2, cm_x)
+        return h, (S.astype(wkv.dtype), n1.astype(tm_x.dtype),
+                   n2.astype(cm_x.dtype))
+
+    if cfg.scan_layers:
+        x, (wkv, tm_x, cm_x) = jax.lax.scan(
+            body, x, (params["layers"], cache["wkv"], cache["tm_x"],
+                      cache["cm_x"]))
+    else:
+        wkvs, tms, cms = [], [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, (S, t1, t2) = body(x, (lp, cache["wkv"][i], cache["tm_x"][i],
+                                      cache["cm_x"][i]))
+            wkvs.append(S); tms.append(t1); cms.append(t2)
+        wkv, tm_x, cm_x = jnp.stack(wkvs), jnp.stack(tms), jnp.stack(cms)
+    x = L.rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("btd,vd->btv", x, params["out_embed"])
+    logits = constrain(logits, "dp", "sp", None)
+    return logits, {"wkv": wkv, "tm_x": tm_x, "cm_x": cm_x}

@@ -1,0 +1,1 @@
+from repro.optim.optimizers import sgd, adamw, Optimizer  # noqa: F401

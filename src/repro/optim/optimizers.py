@@ -1,0 +1,91 @@
+"""Pure-JAX optimizers (no optax in this container).
+
+``Optimizer`` bundles init/apply.  Moment dtype is configurable — bf16
+moments halve optimizer-state HBM for the 235B MoE config (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    apply: Callable  # (params, grads, state, step) -> (new_params, new_state)
+
+
+def sgd(lr_fn: Callable, momentum: float = 0.0,
+        weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return {}
+        return {"mu": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def apply(params, grads, state, step):
+        lr = lr_fn(step)
+        if momentum == 0.0:
+            new_params = jax.tree.map(
+                lambda p, g: (p.astype(jnp.float32)
+                              - lr * (g.astype(jnp.float32)
+                                      + weight_decay * p.astype(jnp.float32))
+                              ).astype(p.dtype),
+                params, grads)
+            return new_params, state
+        mu = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32),
+            state["mu"], grads)
+        new_params = jax.tree.map(
+            lambda p, m: (p.astype(jnp.float32) - lr * m).astype(p.dtype),
+            params, mu)
+        return new_params, {"mu": mu}
+
+    return Optimizer(init, apply)
+
+
+def adamw(lr_fn: Callable, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          moment_dtype: str = "float32",
+          grad_clip: Optional[float] = 1.0) -> Optimizer:
+    mdt = jnp.dtype(moment_dtype)
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, mdt)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def apply(params, grads, state, step):
+        lr = lr_fn(step)
+        step_f = jnp.asarray(step, jnp.float32) + 1.0
+        if grad_clip is not None:
+            gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                              for g in jax.tree.leaves(grads)) + 1e-12)
+            scale = jnp.minimum(1.0, grad_clip / gn)
+            grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+        bc1 = 1.0 - jnp.power(b1, step_f)
+        bc2 = 1.0 - jnp.power(b2, step_f)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+            u = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            newp = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+            return newp, m32.astype(mdt), v32.astype(mdt)
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in
+               zip(flat_p, flat_g, flat_m, flat_v)]
+        new_params = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_params, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, apply)

@@ -1,0 +1,128 @@
+"""Logical-axis sharding context.
+
+Models call ``constrain(x, "dp", "sp", None, ...)`` with *logical* axes; this
+module maps them to mesh axes (or no-ops when no mesh is active, e.g. CPU
+smoke tests).  ``param_shardings`` maps a SpecFactory tree of logical
+PartitionSpecs to concrete NamedShardings.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axis (or tuple of mesh axes)
+DEFAULT_RULES = {
+    "dp": ("pod", "data"),   # batch
+    "fsdp": "data",          # param contraction dims (ZeRO-3)
+    "tp": "model",           # tensor parallel
+    "ep": "model",           # expert parallel
+    "sp": "model",           # sequence parallel (activations)
+    "dpsp": ("pod", "data", "model"),  # fully flattened (MoE token groups)
+}
+
+_ctx = threading.local()
+
+
+def _state():
+    if not hasattr(_ctx, "mesh"):
+        _ctx.mesh = None
+        _ctx.rules = DEFAULT_RULES
+    return _ctx
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    st = _state()
+    prev = (st.mesh, st.rules)
+    st.mesh = mesh
+    st.rules = dict(rules or DEFAULT_RULES)
+    try:
+        yield
+    finally:
+        st.mesh, st.rules = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _state().mesh
+
+
+def _map_axis(logical, mesh, rules):
+    if logical is None:
+        return None
+    m = rules.get(logical, None)
+    if m is None:
+        return None
+    if isinstance(m, str):
+        return m if m in mesh.axis_names else None
+    got = tuple(a for a in m if a in mesh.axis_names)
+    return got if got else None
+
+
+def logical_to_spec(spec: P, mesh: Mesh, rules=None) -> P:
+    rules = rules or _state().rules
+    return P(*[_map_axis(a, mesh, rules) for a in spec])
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def constrain(x, *logical_axes):
+    """Sharding constraint by logical axes; axes that do not divide the
+    corresponding dim are dropped (e.g. seq-parallel on a length-1 decode
+    step, or whisper's 1500-frame encoder under a 16-way model axis)."""
+    st = _state()
+    if st.mesh is None:
+        return x
+    mapped = [_map_axis(a, st.mesh, st.rules) for a in logical_axes]
+    mapped = [m if (m is None or x.shape[i] % _axis_size(st.mesh, m) == 0)
+              else None
+              for i, m in enumerate(mapped)]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(st.mesh, P(*mapped)))
+
+
+def param_shardings(spec_tree, mesh: Mesh, rules=None):
+    """Map a tree of logical PartitionSpecs to NamedShardings."""
+    def one(spec):
+        return NamedSharding(mesh, logical_to_spec(spec, mesh, rules))
+    return jax.tree.map(one, spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def shardings_for(spec_tree, abstract_tree, mesh: Mesh, rules=None):
+    """Like param_shardings, but shape-aware: mesh axes that do not divide
+    the corresponding dimension are dropped (e.g. batch=1 long-context
+    decode cannot shard its batch dim over `data`)."""
+    rules = rules or DEFAULT_RULES
+    spec_leaves = jax.tree.flatten(
+        spec_tree, is_leaf=lambda s: isinstance(s, P))[0]
+    abs_leaves, treedef = jax.tree.flatten(abstract_tree)
+    out = []
+    for spec, ab in zip(spec_leaves, abs_leaves):
+        mapped = [m for m in logical_to_spec(spec, mesh, rules)]
+        fixed = []
+        for i, m in enumerate(mapped):
+            if m is not None and (i >= len(ab.shape)
+                                  or ab.shape[i] % _axis_size(mesh, m) != 0):
+                m = None
+            fixed.append(m)
+        out.append(NamedSharding(mesh, P(*fixed)))
+    return treedef.unflatten(out)
+
+
+def batch_sharding(mesh: Mesh, rules=None):
+    rules = rules or DEFAULT_RULES
+    ax = _map_axis("dp", mesh, rules)
+    return NamedSharding(mesh, P(ax))

@@ -1,0 +1,158 @@
+"""Train/serve step builders: the glue between models, CHAOS sync,
+optimizers, and sharding.
+
+``make_train_step(cfg, sync)``  -> (step_fn, TrainState helpers)
+``make_serve_step(cfg)``        -> decode step over a KV/state cache
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.chaos import SyncConfig, init_sync_state, transform_grads
+from repro.core.schedule import make_lr_fn
+from repro.core.types import ArchConfig
+from repro.models import layers as ML
+from repro.models.api import get_ops
+from repro.optim import adamw, sgd
+
+
+def make_optimizer(cfg: ArchConfig, base_lr: float = 3e-4,
+                   total_steps: int = 10_000):
+    lr_fn = make_lr_fn(cfg.lr_schedule,
+                       base_lr=1e-3 if cfg.family == "cnn" else base_lr,
+                       steps_per_epoch=max(total_steps // 70, 1),
+                       total_steps=total_steps)
+    if cfg.family == "cnn":
+        return sgd(lr_fn)  # paper: plain SGD + decay schedule
+    return adamw(lr_fn, moment_dtype=cfg.opt_moment_dtype)
+
+
+def init_train_state(cfg: ArchConfig, key, sync: SyncConfig,
+                     optimizer=None, abstract: bool = False):
+    ops = get_ops(cfg)
+    optimizer = optimizer or make_optimizer(cfg)
+    if abstract:
+        params = jax.eval_shape(ops.init, key)
+    else:
+        params = ops.init(key)
+    opt_state = (jax.eval_shape(optimizer.init, params) if abstract
+                 else optimizer.init(params))
+    sync_state = (jax.eval_shape(lambda p: init_sync_state(sync, p), params)
+                  if abstract else init_sync_state(sync, params))
+    return {"params": params, "opt": opt_state, "sync": sync_state,
+            "step": (jax.ShapeDtypeStruct((), jnp.int32) if abstract
+                     else jnp.zeros((), jnp.int32))}
+
+
+def state_specs(cfg: ArchConfig, sync: SyncConfig, optimizer=None):
+    """Logical PartitionSpec tree matching init_train_state's output."""
+    ops = get_ops(cfg)
+    pspecs = ops.param_specs()
+    optimizer = optimizer or make_optimizer(cfg)
+
+    # optimizer / sync states mirror param sharding (one params-shaped tree
+    # per top-level key: adamw {m, v}, sgd-momentum {mu}, chaos {prev_grad})
+    abstract = jax.eval_shape(ops.init, jax.random.key(0))
+    opt_abs = jax.eval_shape(optimizer.init, abstract)
+    sync_abs = jax.eval_shape(lambda p: init_sync_state(sync, p), abstract)
+    opt_specs = {k: pspecs for k in opt_abs} if isinstance(opt_abs, dict) else {}
+    sync_specs = {k: pspecs for k in sync_abs}
+    return {"params": pspecs, "opt": opt_specs, "sync": sync_specs,
+            "step": P()}
+
+
+def make_train_step(cfg: ArchConfig, sync: SyncConfig, optimizer=None):
+    """Returns step(state, batch) -> (new_state, metrics).
+
+    CHAOS mode: apply the previous step's (already-reduced) gradients first,
+    then compute this step's gradients — their cross-replica reduction gates
+    only the step output, so it overlaps with compute (DESIGN.md §2).
+    """
+    ops = get_ops(cfg)
+    optimizer = optimizer or make_optimizer(cfg)
+
+    def grad_fn(params, batch):
+        """Gradients, with optional microbatching (gradient accumulation):
+        the global batch is split into cfg.micro_batches slices processed
+        sequentially — activation memory scales 1/n_micro."""
+        n_micro = max(cfg.micro_batches, 1)
+        if n_micro == 1:
+            return jax.value_and_grad(ops.loss, has_aux=True)(params, batch)
+
+        def split(x):
+            return x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+        mb = jax.tree.map(split, batch)
+
+        def one(b):
+            (l, m), g = jax.value_and_grad(ops.loss, has_aux=True)(params, b)
+            g = jax.tree.map(lambda t: t.astype(jnp.float32), g)
+            return (l, m), g
+
+        from repro.models import layers as MLY
+        if MLY.UNROLL_ATTN:  # dry-run: unrolled for honest cost accounting
+            (l, m), g = one(jax.tree.map(lambda x: x[0], mb))
+            for i in range(1, n_micro):
+                (li, mi), gi = one(jax.tree.map(lambda x, i=i: x[i], mb))
+                l = l + li
+                m = jax.tree.map(jnp.add, m, mi)
+                g = jax.tree.map(jnp.add, g, gi)
+        else:
+            def body(carry, b):
+                l, m, g = carry
+                (li, mi), gi = one(b)
+                return (l + li, jax.tree.map(jnp.add, m, mi),
+                        jax.tree.map(jnp.add, g, gi)), None
+            (l0, m0), g0 = one(jax.tree.map(lambda x: x[0], mb))
+            (l, m, g), _ = jax.lax.scan(
+                body, (l0, m0, g0), jax.tree.map(lambda x: x[1:], mb))
+        inv = 1.0 / n_micro
+        return ((l * inv, jax.tree.map(lambda t: t * inv, m)),
+                jax.tree.map(lambda t: t * inv, g))
+
+    def step(state, batch):
+        params = state["params"]
+
+        if sync.mode == "chaos":
+            # 1) update with the stale (previous-step) global gradient —
+            #    available immediately, no blocking collective
+            g_apply = state["sync"]["prev_grad"]
+            new_params, new_opt = optimizer.apply(params, g_apply,
+                                                  state["opt"], state["step"])
+            # 2) fresh gradients at the new params -> next step's update;
+            #    their reduction gates only the step OUTPUT (overlappable)
+            (loss, metrics), grads = grad_fn(new_params, batch)
+            new_sync = dict(state["sync"])
+            if sync.compress:
+                from repro.core.chaos import compress_grads
+                grads, new_sync["residual"] = compress_grads(
+                    grads, state["sync"]["residual"])
+            new_sync["prev_grad"] = jax.tree.map(
+                lambda g, p: g.astype(p.dtype), grads, new_params)
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+            g_apply, new_sync = transform_grads(sync, grads, state["sync"])
+            new_params, new_opt = optimizer.apply(params, g_apply,
+                                                  state["opt"], state["step"])
+
+        new_state = {"params": new_params, "opt": new_opt, "sync": new_sync,
+                     "step": state["step"] + 1}
+        metrics = {**metrics, "loss": loss}
+        return new_state, metrics
+
+    return step
+
+
+def make_serve_step(cfg: ArchConfig):
+    ops = get_ops(cfg)
+
+    def serve_step(params, cache, tokens, cache_len):
+        logits, new_cache = ops.decode(params, cache, tokens, cache_len)
+        next_tok = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)
+        return next_tok.astype(jnp.int32), new_cache
+
+    return serve_step

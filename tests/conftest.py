@@ -1,0 +1,7 @@
+import os
+import sys
+
+# NOTE: do NOT set xla_force_host_platform_device_count globally — smoke
+# tests and benches must see 1 device (launch/dryrun.py sets 512 itself).
+# Tests that need a few host devices spawn subprocesses (see test_chaos.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,118 @@
+"""Per-architecture smoke tests (deliverable f): reduced same-family config,
+one forward + one train step on CPU, asserting shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.core.chaos import SyncConfig
+from repro.models.api import get_ops
+from repro.train.step import init_train_state, make_optimizer, make_train_step
+
+ARCHS = C.ASSIGNED
+
+
+def _batch(cfg, key, B=2, T=16):
+    tokens = jax.random.randint(key, (B, T), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, axis=1)}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            key, (B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            key, (B, cfg.enc_frames, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_loss(arch):
+    cfg = C.smoke(arch)
+    ops = get_ops(cfg)
+    params = ops.init(jax.random.key(0))
+    batch = _batch(cfg, jax.random.key(1))
+    loss, metrics = ops.loss(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: loss not finite"
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step(arch):
+    cfg = C.smoke(arch)
+    sync = SyncConfig(mode="bsp")
+    opt = make_optimizer(cfg, base_lr=1e-3, total_steps=10)
+    step = jax.jit(make_train_step(cfg, sync, opt))
+    state = init_train_state(cfg, jax.random.key(0), sync, opt)
+    batch = _batch(cfg, jax.random.key(1))
+    new_state, metrics = step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert int(new_state["step"]) == 1
+    # params actually changed
+    p0 = jax.tree.leaves(state["params"])[0]
+    p1 = jax.tree.leaves(new_state["params"])[0]
+    assert not np.allclose(np.asarray(p0, np.float32),
+                           np.asarray(p1, np.float32))
+    # no NaNs anywhere in the updated params
+    for leaf in jax.tree.leaves(new_state["params"]):
+        assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS
+                                  if C.smoke(a).has_decoder])
+def test_decode_step(arch):
+    cfg = C.smoke(arch)
+    ops = get_ops(cfg)
+    if ops.decode is None:
+        pytest.skip("no decode path")
+    params = ops.init(jax.random.key(0))
+    B, S = 2, 32
+    cache = ops.init_cache(B, S)
+    tokens = jax.random.randint(jax.random.key(1), (B, 1), 0, cfg.vocab_size)
+    logits, new_cache = ops.decode(params, cache, tokens, 0)
+    assert logits.shape[0] == B and logits.shape[1] == 1
+    assert logits.shape[2] >= cfg.vocab_size
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert jax.tree.structure(new_cache) == jax.tree.structure(cache)
+
+
+@pytest.mark.parametrize("arch", ["chaos-small", "chaos-medium",
+                                  "chaos-large"])
+def test_cnn_forward(arch):
+    cfg = C.get(arch)
+    ops = get_ops(cfg)
+    params = ops.init(jax.random.key(0))
+    imgs = jax.random.uniform(jax.random.key(1), (4, 29, 29, 1))
+    labels = jnp.array([0, 1, 2, 3])
+    loss, metrics = ops.loss(params, {"images": imgs, "labels": labels})
+    assert bool(jnp.isfinite(loss))
+    assert 0.0 <= float(metrics["error_rate"]) <= 1.0
+
+
+def test_cnn_param_counts_match_paper_table2():
+    from repro.models.cnn import param_count
+    assert param_count(C.get("chaos-small")) == 6405      # 85+1260+4550+510
+    assert param_count(C.get("chaos-medium")) == 76040    # 340+20040+54150+1510
+    assert param_count(C.get("chaos-large")) == 383160    # 340+30060+216100+135150+1510
+
+
+def test_full_config_param_counts():
+    """Full-config analytic parameter counts are in the advertised range."""
+    expect = {
+        "qwen3-14b": (13e9, 17e9),
+        "mistral-nemo-12b": (11e9, 14e9),
+        "qwen3-moe-235b-a22b": (200e9, 260e9),
+        "qwen3-moe-30b-a3b": (25e9, 35e9),
+        "llava-next-34b": (30e9, 38e9),
+        "minicpm3-4b": (3.4e9, 5e9),
+        "zamba2-1.2b": (0.9e9, 1.7e9),
+        "rwkv6-1.6b": (1.2e9, 2.2e9),
+        "whisper-small": (0.15e9, 0.4e9),
+        "minicpm-2b": (2.0e9, 3.3e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = C.get(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n / 1e9:.2f}B outside [{lo/1e9},{hi/1e9}]"
+    # MoE active params
+    a = C.get("qwen3-moe-235b-a22b").active_param_count()
+    assert 15e9 <= a <= 30e9

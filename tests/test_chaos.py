@@ -1,0 +1,203 @@
+"""CHAOS sync-strategy semantics (the paper's core contribution).
+
+Worker-model tests run in a subprocess with 4 forced host devices (the env
+flag must be set before jax initialises, and conftest must NOT set it
+globally)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.core.chaos import SyncConfig, compress_grads, init_sync_state
+from repro.train.step import init_train_state, make_optimizer, make_train_step
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run_sub(code: str, n_dev: int = 4):
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={n_dev}",
+               PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def test_chaos_mode_is_delayed_bsp():
+    """In the pjit path, chaos applies exactly the previous step's gradient:
+    after steps t and t+1, chaos params == bsp params computed with a
+    one-step-shifted gradient sequence."""
+    import dataclasses
+    # f32 params so the staleness buffer (stored in param dtype) is exact
+    cfg = dataclasses.replace(C.smoke("qwen3-14b"), param_dtype="float32")
+    tokens = jax.random.randint(jax.random.key(1), (2, 16), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, 1)}
+
+    from repro.optim import sgd
+    opt = sgd(lambda s: 0.01)
+
+    bsp = make_train_step(cfg, SyncConfig("bsp"), opt)
+    chaos = make_train_step(cfg, SyncConfig("chaos"), opt)
+
+    s_b = init_train_state(cfg, jax.random.key(0), SyncConfig("bsp"), opt)
+    s_c = init_train_state(cfg, jax.random.key(0), SyncConfig("chaos"), opt)
+
+    # step 1: chaos applies zero grad; params unchanged
+    s_c1, _ = jax.jit(chaos)(s_c, batch)
+    p0 = jax.tree.leaves(s_c["params"])[0]
+    p1 = jax.tree.leaves(s_c1["params"])[0]
+    np.testing.assert_array_equal(np.asarray(p0), np.asarray(p1))
+
+    # step 2 of chaos == step 1 of bsp (same batch => same gradient)
+    s_c2, _ = jax.jit(chaos)(s_c1, batch)
+    s_b1, _ = jax.jit(bsp)(s_b, batch)
+    a = np.asarray(jax.tree.leaves(s_c2["params"])[0], np.float32)
+    b = np.asarray(jax.tree.leaves(s_b1["params"])[0], np.float32)
+    np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+def test_compress_grads_error_feedback_unbiased():
+    """bf16 compression with error feedback: the cumulative applied update
+    converges to the cumulative true gradient (unbiasedness)."""
+    g = jnp.full((1000,), 1e-3 + 3e-8, jnp.float32)  # not bf16-representable
+    residual = jnp.zeros_like(g)
+    total = jnp.zeros_like(g)
+    for _ in range(64):
+        q, r = compress_grads({"g": g}, {"g": residual})
+        residual = r["g"]
+        total = total + q["g"].astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(total), np.asarray(g) * 64,
+                               rtol=1e-3)
+
+
+def test_worker_model_bsp_equals_serial_sgd():
+    out = _run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.chaos import SyncConfig, worker_train_fn, replicate_for_workers
+        from repro.launch.mesh import make_host_mesh
+        import repro.configs as C
+        from repro.models.api import get_ops
+
+        cfg = C.get("chaos-small")
+        ops = get_ops(cfg)
+        params = ops.init(jax.random.key(0))
+        n = 4
+        mesh = make_host_mesh(n)
+        imgs = jax.random.uniform(jax.random.key(1), (n, 8, 29, 29, 1))
+        labels = jax.random.randint(jax.random.key(2), (n, 8), 0, 10)
+        batch = {"images": imgs, "labels": labels}
+        lr = 0.05
+
+        fn = worker_train_fn(ops.loss, lambda s: lr, SyncConfig("bsp"), mesh)
+        state = {"params": replicate_for_workers(params, n),
+                 "step": jnp.zeros((n,), jnp.int32)}
+        state, metrics = fn(state, batch)
+
+        # serial reference: SGD on the concatenated batch
+        flat = {"images": imgs.reshape(-1, 29, 29, 1), "labels": labels.reshape(-1)}
+        g = jax.grad(lambda p, b: ops.loss(p, b)[0])(params, flat)
+        ref = jax.tree.map(lambda p, gg: p - lr * gg, params, g)
+
+        a = np.asarray(jax.tree.leaves(state["params"])[0][0])
+        b = np.asarray(jax.tree.leaves(ref)[0])
+        np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
+        # all workers identical under bsp
+        w = np.asarray(jax.tree.leaves(state["params"])[0])
+        for i in range(1, n):
+            np.testing.assert_allclose(w[0], w[i], atol=0)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_worker_model_chaos_parity_and_staleness():
+    """CHAOS workers: (a) stay deterministic, (b) converge to the same loss
+    region as bsp (paper Result 4 analogue), (c) first step applies only the
+    local gradient (remote contributions are one step stale)."""
+    out = _run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.chaos import (SyncConfig, make_worker_step,
+                                      worker_train_fn, replicate_for_workers,
+                                      zeros_like_f32)
+        from repro.launch.mesh import make_host_mesh
+        import repro.configs as C
+        from repro.models.api import get_ops
+        from repro.data.mnist import make_dataset
+
+        cfg = C.get("chaos-small")
+        ops = get_ops(cfg)
+        n = 4
+        mesh = make_host_mesh(n)
+        imgs, labels = make_dataset(n * 16 * 52, seed=0)
+        lr = 0.05
+
+        def run(mode, steps=50):
+            params = ops.init(jax.random.key(0))
+            state = {"params": replicate_for_workers(params, n),
+                     "step": jnp.zeros((n,), jnp.int32)}
+            if mode == "chaos":
+                state["prev_grad"] = replicate_for_workers(
+                    zeros_like_f32(params), n)
+            fn = worker_train_fn(ops.loss, lambda s: lr, SyncConfig(mode), mesh)
+            losses = []
+            for t in range(steps):
+                lo = t * n * 16
+                b = {"images": imgs[lo:lo + n*16].reshape(n, 16, 29, 29, 1),
+                     "labels": labels[lo:lo + n*16].reshape(n, 16)}
+                state, m = fn(state, b)
+                losses.append(float(m["loss"]))
+            return losses
+
+        l_bsp = run("bsp")
+        l_chaos = run("chaos")
+        l_local = run("localsgd")
+        assert l_bsp[-1] < l_bsp[0] * 0.85, ("bsp no convergence", l_bsp)
+        assert l_chaos[-1] < l_chaos[0] * 0.9, ("chaos no convergence", l_chaos)
+        assert l_local[-1] < l_local[0] * 0.9, ("localsgd", l_local)
+        # Result 4 analogue: final losses comparable (within 25%)
+        assert abs(l_chaos[-1] - l_bsp[-1]) / l_bsp[-1] < 0.25, (l_chaos[-1], l_bsp[-1])
+        print("OK", l_bsp[-1], l_chaos[-1], l_local[-1])
+    """)
+    assert "OK" in out
+
+
+def test_localsgd_divergence_and_averaging():
+    """Between syncs, localsgd workers diverge; at the K-step boundary all
+    workers hold identical (averaged) params."""
+    out = _run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.chaos import SyncConfig, worker_train_fn, replicate_for_workers
+        from repro.launch.mesh import make_host_mesh
+        import repro.configs as C
+        from repro.models.api import get_ops
+
+        cfg = C.get("chaos-small")
+        ops = get_ops(cfg)
+        n = 4
+        mesh = make_host_mesh(n)
+        fn = worker_train_fn(ops.loss, lambda s: 0.05,
+                             SyncConfig("localsgd", local_steps=4), mesh)
+        params = ops.init(jax.random.key(0))
+        state = {"params": replicate_for_workers(params, n),
+                 "step": jnp.zeros((n,), jnp.int32)}
+        for t in range(4):
+            imgs = jax.random.uniform(jax.random.key(10 + t), (n, 8, 29, 29, 1))
+            labels = jax.random.randint(jax.random.key(20 + t), (n, 8), 0, 10)
+            state, _ = fn(state, {"images": imgs, "labels": labels})
+            w = np.asarray(jax.tree.leaves(state["params"])[0], np.float32)
+            identical = np.allclose(w[0], w[1], atol=1e-7)
+            if t < 3:
+                assert not identical, f"step {t}: workers should differ"
+            else:
+                assert identical, "step 3 (K=4): workers must be averaged"
+        print("OK")
+    """)
+    assert "OK" in out

@@ -1,0 +1,182 @@
+"""Pallas kernel validation: shape/dtype sweeps + hypothesis property tests
+against the pure-jnp oracle (interpret=True on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import conv2d as K
+from repro.kernels import ops as kops
+from repro.kernels import ref
+
+# the paper's actual conv layer shapes (Table 2)
+PAPER_SHAPES = [
+    (8, 29, 29, 1, 4, 5),      # small conv1
+    (8, 13, 13, 5, 5, 10),     # small conv2
+    (4, 29, 29, 1, 4, 20),     # medium/large conv1
+    (4, 13, 13, 20, 5, 40),    # medium conv2
+    (2, 26, 26, 20, 5, 60),    # large conv2
+    (2, 11, 11, 60, 6, 100),   # large conv3
+]
+
+
+@pytest.mark.parametrize("B,H,W,Cin,Kk,Cout", PAPER_SHAPES)
+def test_conv_fwd_paper_shapes(B, H, W, Cin, Kk, Cout):
+    k1, k2 = jax.random.split(jax.random.key(0))
+    x = jax.random.normal(k1, (B, H, W, Cin), jnp.float32)
+    w = jax.random.normal(k2, (Kk, Kk, Cin, Cout), jnp.float32) * 0.1
+    np.testing.assert_allclose(kops.conv2d_valid(x, w),
+                               ref.conv2d_valid_ref(x, w),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_conv_dtypes(dtype):
+    k1, k2 = jax.random.split(jax.random.key(1))
+    x = jax.random.normal(k1, (4, 13, 13, 5), jnp.float32).astype(dtype)
+    w = (jax.random.normal(k2, (5, 5, 5, 10), jnp.float32) * 0.1).astype(dtype)
+    got = kops.conv2d_valid(x, w).astype(jnp.float32)
+    want = ref.conv2d_valid_ref(x.astype(jnp.float32),
+                                w.astype(jnp.float32))
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(got, want, atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("B,H,W,Cin,Kk,Cout", PAPER_SHAPES[:4])
+def test_conv_grads(B, H, W, Cin, Kk, Cout):
+    k1, k2 = jax.random.split(jax.random.key(2))
+    x = jax.random.normal(k1, (B, H, W, Cin), jnp.float32)
+    w = jax.random.normal(k2, (Kk, Kk, Cin, Cout), jnp.float32) * 0.1
+    f1 = lambda x, w: jnp.sum(jnp.tanh(kops.conv2d_valid(x, w)))
+    f2 = lambda x, w: jnp.sum(jnp.tanh(ref.conv2d_valid_ref(x, w)))
+    g1 = jax.grad(f1, (0, 1))(x, w)
+    g2 = jax.grad(f2, (0, 1))(x, w)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, atol=2e-3, rtol=2e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    B=st.integers(1, 6),
+    H=st.integers(5, 18),
+    Cin=st.integers(1, 8),
+    Kk=st.integers(1, 5),
+    Cout=st.integers(1, 12),
+    bb=st.integers(1, 8),
+)
+def test_conv_fwd_hypothesis(B, H, Cin, Kk, Cout, bb):
+    """Property sweep over arbitrary shapes and batch blockings."""
+    if Kk > H:
+        return
+    k1, k2 = jax.random.split(jax.random.key(B * 1000 + H))
+    x = jax.random.normal(k1, (B, H, H, Cin), jnp.float32)
+    w = jax.random.normal(k2, (Kk, Kk, Cin, Cout), jnp.float32) * 0.2
+    got = K.conv2d_fwd(x, w, batch_block=bb, interpret=True)
+    np.testing.assert_allclose(got, ref.conv2d_valid_ref(x, w),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_dw_kernel_matches_ref():
+    k1, k2 = jax.random.split(jax.random.key(3))
+    x = jax.random.normal(k1, (6, 13, 13, 5), jnp.float32)
+    dy = jax.random.normal(k2, (6, 9, 9, 10), jnp.float32)
+    got = K.conv2d_dw(x, dy, (5, 5, 5, 10), interpret=True)
+    np.testing.assert_allclose(got, ref.conv2d_dw_ref(x, dy),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_cnn_with_kernel_matches_xla_path():
+    """End-to-end: the paper CNN forward via Pallas == via XLA conv."""
+    import repro.configs as C
+    from repro.models import cnn
+    from repro.models import layers as L
+    cfg = C.get("chaos-small")
+    params = cnn.build_params(cfg, L.InitFactory(jax.random.key(0),
+                                                 jnp.float32))
+    x = jax.random.uniform(jax.random.key(1), (4, 29, 29, 1))
+    y1 = cnn.forward(params, x, cfg, use_kernel=False)
+    y2 = cnn.forward(params, x, cfg, use_kernel=True)
+    np.testing.assert_allclose(y1, y2, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Pallas flash-attention kernel (the §Perf memory-term optimization)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,Hq,Hkv,T,D,Dv,causal,bq,bk", [
+    (1, 2, 2, 128, 32, 32, True, 32, 32),
+    (2, 4, 2, 96, 16, 16, True, 32, 32),      # GQA + non-dividing T
+    (1, 2, 1, 256, 64, 32, False, 64, 128),   # Dv != D, non-causal
+    (1, 1, 1, 70, 16, 16, True, 32, 32),      # ragged tail
+])
+def test_pallas_flash_attention(B, Hq, Hkv, T, D, Dv, causal, bq, bk):
+    from repro.kernels.flash_attention import flash_attention_fwd
+    from repro.models import layers as L
+    ks = jax.random.split(jax.random.key(B * 7 + T), 3)
+    q = jax.random.normal(ks[0], (B, Hq, T, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Hkv, T, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Hkv, T, Dv), jnp.float32)
+    got = flash_attention_fwd(q, k, v, causal=causal, block_q=bq, block_k=bk)
+    # oracle: the validated jnp blockwise implementation (BTHD layout)
+    want = L.flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                             v.transpose(0, 2, 1, 3), causal=causal
+                             ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(got, want, atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pallas_flash_attention_dtypes(dtype):
+    from repro.kernels.flash_attention import flash_attention_fwd
+    from repro.models import layers as L
+    ks = jax.random.split(jax.random.key(9), 3)
+    q = jax.random.normal(ks[0], (1, 2, 64, 32), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (1, 2, 64, 32), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (1, 2, 64, 32), jnp.float32).astype(dtype)
+    got = flash_attention_fwd(q, k, v, causal=True, block_q=32, block_k=32)
+    want = L.flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                             v.transpose(0, 2, 1, 3), causal=True
+                             ).transpose(0, 2, 1, 3)
+    tol = 3e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32), atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# Pallas WKV6 recurrence kernel (attention-free archs' hot spot)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,T,H,D,chunk", [
+    (2, 192, 3, 16, 64),
+    (1, 64, 2, 32, 32),
+    (2, 256, 1, 64, 64),   # production tile shape (D=64)
+])
+def test_pallas_wkv6_kernel(B, T, H, D, chunk):
+    from repro.kernels.wkv6 import wkv6_chunked
+    from repro.models.rwkv6 import wkv_chunked
+    ks = jax.random.split(jax.random.key(B * 13 + T), 5)
+    r = jax.random.normal(ks[0], (B, T, H, D)) * 0.5
+    k = jax.random.normal(ks[1], (B, T, H, D)) * 0.5
+    v = jax.random.normal(ks[2], (B, T, H, D))
+    w = jnp.exp(-jnp.exp(jnp.clip(
+        jax.random.normal(ks[3], (B, T, H, D)), None, 0.0)))
+    u = jax.random.normal(ks[4], (H, D)) * 0.1
+    got = wkv6_chunked(r, k, v, w, u, chunk=chunk)
+    want, _ = wkv_chunked(r, k, v, w, u)
+    np.testing.assert_allclose(got, want, atol=2e-3, rtol=2e-3)
+
+
+def test_pallas_wkv6_state_continuity():
+    """The VMEM-carried state must make chunk boundaries seamless: kernel
+    output == naive per-token recurrence across many chunks."""
+    from repro.kernels.wkv6 import wkv6_chunked
+    from tests.test_numerics import naive_wkv
+    B, T, H, D = 1, 128, 2, 8
+    ks = jax.random.split(jax.random.key(77), 5)
+    r = jax.random.normal(ks[0], (B, T, H, D)) * 0.5
+    k = jax.random.normal(ks[1], (B, T, H, D)) * 0.5
+    v = jax.random.normal(ks[2], (B, T, H, D))
+    w = jnp.exp(-jnp.exp(jnp.clip(
+        jax.random.normal(ks[3], (B, T, H, D)), None, 0.0)))
+    u = jax.random.normal(ks[4], (H, D)) * 0.1
+    got = wkv6_chunked(r, k, v, w, u, chunk=32)
+    want, _ = naive_wkv(r, k, v, w, u)
+    np.testing.assert_allclose(got, want, atol=2e-3, rtol=2e-3)

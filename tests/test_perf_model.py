@@ -1,0 +1,84 @@
+"""Regression tests for the paper's performance model (Section 5.2) —
+this is the quantitative reproduction of Tables 8/9 and Result 3."""
+import numpy as np
+import pytest
+
+from repro.core import perf_model as pm
+
+
+def test_table8_small_large_within_1pct():
+    """Small & large CNN predictions reproduce the paper's Table 8 to <1%."""
+    t8 = pm.table8()
+    for arch in ("small", "large"):
+        for p, ref in pm.PAPER_TABLE8[arch].items():
+            assert abs(t8[arch][p] - ref) / ref < 0.01, (arch, p, t8[arch][p])
+
+
+def test_table8_medium_within_paper_deviation():
+    """Medium matches within the paper's own reported model deviation
+    (14.76% average for medium) + margin."""
+    t8 = pm.table8()
+    for p, ref in pm.PAPER_TABLE8["medium"].items():
+        assert abs(t8["medium"][p] - ref) / ref < 0.15, (p, t8["medium"][p])
+
+
+def test_table9_doubling_epochs_doubles_time():
+    """Paper Table 9: doubling images or epochs ~doubles execution time;
+    doubling threads does NOT halve it."""
+    base = pm.predict_time("small", 240)
+    assert abs(base / 60 - 8.9) / 8.9 < 0.02
+    t2ep = pm.predict_time("small", 240, ep=140)
+    assert 1.9 < t2ep / base < 2.05
+    t2im = pm.predict_time("small", 240, i=120_000, it=20_000)
+    assert 1.9 < t2im / base < 2.05
+    t2p = pm.predict_time("small", 480)
+    assert t2p / base > 0.6  # far from the 0.5 of perfect scaling
+
+
+def test_result3_speedups():
+    """Result 3: ~103x vs 1 Phi thread (large CNN conv layers; the overall
+    model gives ~100x for large), and graceful small-arch scaling."""
+    s_large = pm.predict_speedup("large", 244)
+    assert 85 <= s_large <= 110, s_large
+    s_small = pm.predict_speedup("small", 244)
+    assert 55 <= s_small <= 75, s_small
+    # near-linear to 60 threads (Fig 8): doubling 15->30->60.  The small
+    # CNN's sequential floor + memory contention bite earlier in the model
+    # (the paper's measured small-arch curve also flattens first).
+    lo = {"small": 1.6, "medium": 1.8, "large": 1.8}
+    for arch in ("small", "medium", "large"):
+        t15 = pm.predict_time(arch, 15)
+        t30 = pm.predict_time(arch, 30)
+        t60 = pm.predict_time(arch, 60)
+        assert lo[arch] < t15 / t30 < 2.1, (arch, t15 / t30)
+        assert lo[arch] < t30 / t60 < 2.1, (arch, t30 / t60)
+
+
+def test_scaling_beyond_hw_threads_monotone_with_diminishing_returns():
+    """Result 6: CHAOS scales to thousands of threads, with diminishing
+    returns (Table 8's flattening curve)."""
+    for arch in ("small", "medium", "large"):
+        ts = [pm.predict_time(arch, p) for p in (480, 960, 1920, 3840)]
+        assert all(a > b for a, b in zip(ts, ts[1:])), ts  # monotone faster
+        gain1 = ts[0] / ts[1]
+        gain3 = ts[2] / ts[3]
+        assert gain3 < gain1  # flattening
+
+
+def test_memory_contention_extrapolation_matches_paper_predicted_rows():
+    for arch in ("small", "medium", "large"):
+        for p in (480, 960, 1920, 3840):
+            ref = pm.MEM_CONTENTION[arch][p]
+            est = pm.memory_contention(arch, p * 1)  # exact-row lookup
+            assert est == ref
+    # linear extrapolation between anchor rows
+    est = pm.memory_contention("small", 2400)
+    assert abs(est - pm.MEM_CONTENTION["small"][240] * 10) / est < 1e-6
+
+
+def test_cpi_rule():
+    assert pm.cpi(60) == 1.0
+    assert pm.cpi(122) == 1.0    # 2 threads/core
+    assert pm.cpi(180) == 1.5    # 3 threads/core
+    assert pm.cpi(240) == 2.0
+    assert pm.cpi(3840) == 2.0
