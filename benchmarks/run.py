@@ -1,9 +1,12 @@
 """Benchmark harness — one section per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (derived = the quantity the
-paper's table reports: % time, minutes, speedup, GFLOP/s, ...).
+paper's table reports: % time, minutes, speedup, GFLOP/s, ...) and
+persists each section's rows to ``BENCH_<section>.json`` (see ``--out``)
+so the perf trajectory accumulates across PRs.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only SECTION]
+                                            [--out DIR]
 """
 from __future__ import annotations
 
@@ -115,21 +118,91 @@ def bench_sync_modes(quick=False):
 
 
 # ---------------------------------------------------------------------------
-# Kernel microbenchmarks (paper Listing 1: vectorised conv loops)
+# Kernel microbenchmarks (paper Listing 1: vectorised conv loops) — tuned
+# vs the hard-coded batch_block=8 whole-map baseline, per Table-2 net
 # ---------------------------------------------------------------------------
+# (B, H, W, Cin, K, Cout) conv shapes of the paper's three Table-2 nets
+NET_CONV_SHAPES = {
+    "small": [(8, 29, 29, 1, 4, 5), (8, 13, 13, 5, 5, 10)],
+    "medium": [(8, 29, 29, 1, 4, 20), (8, 13, 13, 20, 5, 40)],
+    "large": [(8, 26, 26, 20, 5, 60), (8, 11, 11, 60, 6, 100)],
+}
+
+
 def bench_kernels(quick=False):
+    from repro.kernels import autotune as AT
+    from repro.kernels import conv2d as CK
     from repro.kernels import ops as kops
     from repro.kernels import ref
 
-    B, H, W, Cin, K, Cout = 8, 26, 26, 20, 5, 60  # large-net conv2
+    detail = []
+    nets = ["small"] if quick else ["small", "medium", "large"]
+    iters = 1 if quick else 2
+    # match the training path's interpret mode so tuned configs land under
+    # the cache key that ops._fwd_cfg/_bwd_cfg actually look up on this host
+    interp = kops._interpret()
+    for net in nets:
+        for (B, H, W, Cin, K, Cout) in NET_CONV_SHAPES[net]:
+            x = jax.random.normal(jax.random.key(0), (B, H, W, Cin),
+                                  jnp.float32)
+            w = jax.random.normal(jax.random.key(1), (K, K, Cin, Cout),
+                                  jnp.float32) * 0.1
+            dy = jax.random.normal(jax.random.key(2),
+                                   (B, H - K + 1, W - K + 1, Cout),
+                                   jnp.float32)
+            b = jax.random.normal(jax.random.key(3), (Cout,),
+                                  jnp.float32) * 0.1
+            # tune the fused variants models/cnn.py actually executes
+            y = jnp.tanh(ref.conv2d_valid_ref(x, w) + b)
+            flops = 2 * B * (H - K + 1) * (W - K + 1) * K * K * Cin * Cout
+            cfg, rep = AT.tune_conv_fwd(x, w, b, activation="tanh",
+                                        iters=iters, interpret=interp)
+            bcfg, brep = AT.tune_conv_bwd(x, dy, w, y, iters=iters,
+                                          interpret=interp)
+            shp = f"{net}/conv_{H}x{W}x{Cin}_k{K}_{Cout}"
+            row(f"kernel/fwd/{shp}/default", rep["baseline_us"],
+                f"{flops / rep['baseline_us'] / 1e3:.2f}GFLOPs")
+            row(f"kernel/fwd/{shp}/tuned", rep["best_us"],
+                f"{rep['baseline_us'] / rep['best_us']:.2f}x_cfg={cfg}")
+            row(f"kernel/bwd_fused/{shp}/default", brep["baseline_us"],
+                f"vs_tuned_{brep['baseline_us'] / brep['best_us']:.2f}x")
+            # best_us <= baseline_us by construction: the batch_block=8
+            # baseline is always in the measured candidate set
+            detail.append({
+                "net": net,
+                "shape": [B, H, W, Cin, K, Cout],
+                "fwd": {"variant": "bias_tanh",
+                        "default_us": rep["baseline_us"],
+                        "tuned_us": rep["best_us"], "tuned_config": cfg,
+                        "candidates": rep["candidates"]},
+                "bwd_fused": {"variant": "dtanh",
+                              "default_us": brep["baseline_us"],
+                              "tuned_us": brep["best_us"],
+                              "tuned_config": bcfg},
+            })
+
+    # fused vs split backward + Pallas-vs-XLA reference points (large conv2)
+    B, H, W, Cin, K, Cout = 8, 26, 26, 20, 5, 60
     x = jax.random.normal(jax.random.key(0), (B, H, W, Cin), jnp.float32)
     w = jax.random.normal(jax.random.key(1), (K, K, Cin, Cout),
                           jnp.float32) * 0.1
-    flops = 2 * B * (H - K + 1) * (W - K + 1) * K * K * Cin * Cout
+    dy = jax.random.normal(jax.random.key(2), (B, 22, 22, Cout), jnp.float32)
+    flops = 2 * B * 22 * 22 * K * K * Cin * Cout
     us_p = _timeit(jax.jit(kops.conv2d_valid), x, w, n=3)
     us_x = _timeit(jax.jit(ref.conv2d_valid_ref), x, w, n=3)
-    row("kernel/conv2d_pallas_interp", us_p, f"{flops / us_p / 1e3:.2f}GFLOPs")
+    mode = "interp" if interp else "compiled"
+    row(f"kernel/conv2d_pallas_{mode}", us_p,
+        f"{flops / us_p / 1e3:.2f}GFLOPs")
     row("kernel/conv2d_xla", us_x, f"{flops / us_x / 1e3:.2f}GFLOPs")
+    us_fused = _timeit(jax.jit(lambda x, dy, w: CK.conv2d_bwd_fused(
+        x, dy, w, interpret=interp)), x, dy, w, n=3)
+    us_split = _timeit(jax.jit(lambda x, dy, w: (
+        CK.conv2d_dx(dy, w, x.shape, interpret=interp),
+        CK.conv2d_dw(x, dy, w.shape, interpret=interp))),
+        x, dy, w, n=3)
+    row("kernel/conv_bwd_fused_1launch", us_fused,
+        f"vs_split_{us_split / us_fused:.2f}x")
+    row("kernel/conv_bwd_split_2launch", us_split, "baseline")
 
     from repro.models import layers as L
     B, T, Hq, Hkv, D = 1, 1024, 8, 2, 64
@@ -140,6 +213,7 @@ def bench_kernels(quick=False):
     us_f = _timeit(fl, q, k, v, n=3)
     aflops = 4 * B * Hq * T * T * D / 2
     row("kernel/flash_attention_1k", us_f, f"{aflops / us_f / 1e3:.2f}GFLOPs")
+    return {"conv_shapes": detail, "autotune_cache": AT.cache_path()}
 
 
 # ---------------------------------------------------------------------------
@@ -174,10 +248,31 @@ def bench_serving(quick=False):
     row("serve/rwkv6-smoke", (time.time() - t0) * 1e6, "see_tok_per_s_above")
 
 
+def _write_section_json(out_dir, section, rows, extra, quick):
+    payload = {
+        "section": section,
+        "backend": jax.default_backend(),
+        "quick": bool(quick),
+        "timestamp": time.time(),
+        "rows": [{"name": n, "us_per_call": us, "derived": d}
+                 for n, us, d in rows],
+    }
+    if isinstance(extra, dict):
+        payload.update(extra)
+    path = os.path.join(out_dir, f"BENCH_{section}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"# wrote {path}", flush=True)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--out",
+                    default=os.path.normpath(
+                        os.path.join(os.path.dirname(__file__), "..")),
+                    help="directory for the BENCH_<section>.json artifacts")
     args = ap.parse_args()
     benches = {
         "layer_times": bench_layer_times,
@@ -187,14 +282,21 @@ def main():
         "roofline": bench_roofline,
         "serving": bench_serving,
     }
+    if args.only and args.only not in benches:
+        ap.error(f"unknown section {args.only!r}; "
+                 f"choose from {', '.join(benches)}")
+    os.makedirs(args.out, exist_ok=True)
     print("name,us_per_call,derived")
     for name, fn in benches.items():
         if args.only and name != args.only:
             continue
+        start = len(ROWS)
         try:
-            fn(quick=args.quick)
+            extra = fn(quick=args.quick)
         except Exception as e:  # keep the harness robust
+            extra = {"error": repr(e)[:500]}
             row(f"{name}/ERROR", 0.0, repr(e)[:120])
+        _write_section_json(args.out, name, ROWS[start:], extra, args.quick)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Tier-1 gate: full test suite + quick kernel benchmark (writes
+# BENCH_kernels.json so kernel perf regressions show up in review).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q "$@"
+python -m benchmarks.run --quick --only kernels

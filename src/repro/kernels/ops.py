@@ -1,6 +1,12 @@
-"""jit'd public wrappers for the Pallas kernels, with custom VJP so the
+"""jit'd public wrappers for the Pallas kernels, with custom VJPs so the
 training path (the paper's hot-spot: conv backprop, Table 5) also runs
-through Pallas.
+through Pallas — and through the autotuner's block configs (DESIGN.md
+§Kernels).
+
+Per conv layer per train step this issues exactly TWO pallas_call launches:
+one fused forward (conv + bias + tanh) and one fused backward (dx + dw + db
+from a single pass, dtanh folded in), down from three with the split
+fwd/dx/dw kernels.
 
 ``interpret`` defaults to True off-TPU (this container is CPU-only — the
 kernels execute their bodies in Python for correctness validation; on a
@@ -14,7 +20,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune as AT
 from repro.kernels import conv2d as K
+from repro.kernels import pool as P
 
 
 def _interpret() -> bool:
@@ -24,22 +32,83 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _fwd_cfg(x, w, variant="plain"):
+    return AT.get_conv_fwd_config(x.shape, w.shape, x.dtype,
+                                  interpret=_interpret(), variant=variant)
+
+
+def _bwd_cfg(x, w, variant="plain"):
+    return AT.get_conv_bwd_config(x.shape, w.shape, x.dtype,
+                                  interpret=_interpret(), variant=variant)
+
+
+# ---------------------------------------------------------------------------
+# Plain valid conv (no epilogue) — kept for callers that fuse nothing
+# ---------------------------------------------------------------------------
 @jax.custom_vjp
 def conv2d_valid(x, w):
-    """Valid conv, stride 1, NHWC x HWIO -> NHWC.  Pallas forward+backward."""
-    return K.conv2d_fwd(x, w, interpret=_interpret())
+    """Valid conv, stride 1, NHWC x HWIO -> NHWC.  Pallas forward+backward,
+    autotuned block sizes, fused single-launch backward."""
+    return K.conv2d_fwd(x, w, interpret=_interpret(), **_fwd_cfg(x, w))
 
 
-def _fwd(x, w):
+def _cv_fwd(x, w):
     return conv2d_valid(x, w), (x, w)
 
 
-def _bwd(res, dy):
+def _cv_bwd(res, dy):
     x, w = res
-    interp = _interpret()
-    dx = K.conv2d_dx(dy, w, x.shape, interpret=interp).astype(x.dtype)
-    dw = K.conv2d_dw(x, dy, w.shape, interpret=interp).astype(w.dtype)
-    return dx, dw
+    dx, dw, _db = K.conv2d_bwd_fused(x, dy, w, interpret=_interpret(),
+                                     **_bwd_cfg(x, w))
+    return dx.astype(x.dtype), dw.astype(w.dtype)
 
 
-conv2d_valid.defvjp(_fwd, _bwd)
+conv2d_valid.defvjp(_cv_fwd, _cv_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Fused conv + bias + tanh — the CNN layer op (models/cnn.py hot path)
+# ---------------------------------------------------------------------------
+@jax.custom_vjp
+def conv2d_bias_tanh(x, w, b):
+    """tanh(conv2d_valid(x, w) + b) in one forward launch; the backward is
+    one launch too (dtanh + dx + dw + db fused)."""
+    return K.conv2d_fwd(x, w, b, activation="tanh", interpret=_interpret(),
+                        **_fwd_cfg(x, w, "bias_tanh"))
+
+
+def _cbt_fwd(x, w, b):
+    y = conv2d_bias_tanh(x, w, b)
+    return y, (x, w, b, y)
+
+
+def _cbt_bwd(res, dy):
+    x, w, b, y = res
+    dx, dw, db = K.conv2d_bwd_fused(x, dy, w, y, interpret=_interpret(),
+                                    **_bwd_cfg(x, w, "dtanh"))
+    return dx.astype(x.dtype), dw.astype(w.dtype), db.astype(b.dtype)
+
+
+conv2d_bias_tanh.defvjp(_cbt_fwd, _cbt_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Max pooling (stride == window, VALID) — Pallas both ways
+# ---------------------------------------------------------------------------
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def maxpool2d(x, k: int):
+    """Max pool with window k, stride k, VALID; Pallas forward + backward."""
+    return P.maxpool2d_fwd(x, k, interpret=_interpret())
+
+
+def _mp_fwd(x, k):
+    y = maxpool2d(x, k)
+    return y, (x, y)
+
+
+def _mp_bwd(k, res, dy):
+    x, y = res
+    return (P.maxpool2d_bwd(x, y, dy, k, interpret=_interpret()),)
+
+
+maxpool2d.defvjp(_mp_fwd, _mp_bwd)

@@ -4,8 +4,11 @@ Faithful to Cireşan-style nets used in the paper: valid convolutions,
 max-pooling, tanh hidden activations, softmax output, MSE-free CE loss,
 SGD with the paper's decay schedule (eta0=0.001, x0.9 per epoch).
 
-``use_kernel=True`` routes the convolutions through the Pallas TPU kernel
-(`repro.kernels.conv2d`) — the SIMD-vectorisation analogue (DESIGN.md §2).
+``use_kernel=True`` routes the conv -> tanh -> pool hot path through the
+fused, autotuned Pallas TPU kernels (`repro.kernels.ops`) — the
+SIMD-vectorisation analogue (DESIGN.md §2, §Kernels): one fused
+conv+bias+tanh launch forward and one fused dx+dw+db launch backward per
+conv layer, plus Pallas max-pool both ways.
 """
 from __future__ import annotations
 
@@ -78,17 +81,19 @@ def forward(params, images, cfg: ArchConfig, use_kernel: bool = False):
         if kind == "conv":
             p = params[f"conv{i}"]
             if use_kernel:
-                x = kops.conv2d_valid(x, p["w"]) + p["b"]
+                x = kops.conv2d_bias_tanh(x, p["w"], p["b"])
             else:
-                x = jax.lax.conv_general_dilated(
+                x = jnp.tanh(jax.lax.conv_general_dilated(
                     x, p["w"], (1, 1), "VALID",
-                    dimension_numbers=("NHWC", "HWIO", "NHWC")) + p["b"]
-            x = jnp.tanh(x)
+                    dimension_numbers=("NHWC", "HWIO", "NHWC")) + p["b"])
         elif kind == "pool":
             if k > 1:
-                x = jax.lax.reduce_window(
-                    x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, k, k, 1),
-                    "VALID")
+                if use_kernel:
+                    x = kops.maxpool2d(x, k)
+                else:
+                    x = jax.lax.reduce_window(
+                        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, k, k, 1),
+                        "VALID")
         else:
             p = params[f"fc{i}"]
             if x.ndim > 2:

@@ -1,0 +1,67 @@
+"""Use real hypothesis when installed; otherwise a minimal deterministic
+fallback so ``pytest -x -q`` collects and runs property tests on a clean
+machine (no pip installs available in the eval container).
+
+The fallback implements just what this repo's tests use: ``st.integers``,
+``st.sampled_from``, ``@given`` (positional or keyword strategies), and
+``@settings(max_examples=..., deadline=...)``.  Each wrapped test replays a
+fixed number of pseudo-random examples seeded from the test name, so runs
+are reproducible; there is no shrinking.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies
+except ImportError:
+    import functools
+    import inspect
+    import random
+
+    _DEFAULT_EXAMPLES = 12
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def sample(self, rng):
+            return self._sample(rng)
+
+    class strategies:  # noqa: N801 - mimics the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*pos_strategies, **kw_strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_shim_max_examples",
+                            _DEFAULT_EXAMPLES)
+                rng = random.Random(fn.__name__)
+                for _ in range(n):
+                    pos = [s.sample(rng) for s in pos_strategies]
+                    kws = {k: s.sample(rng)
+                           for k, s in kw_strategies.items()}
+                    fn(*args, *pos, **kws, **kwargs)
+            # pytest must not mistake the strategy params for fixtures
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+        return deco
+
+st = strategies

@@ -3,7 +3,7 @@ tests on core numerics (hypothesis)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core.schedule import make_lr_fn
 from repro.data.mnist import make_dataset, splits
