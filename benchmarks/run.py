@@ -217,6 +217,83 @@ def bench_kernels(quick=False):
 
 
 # ---------------------------------------------------------------------------
+# End-to-end training throughput: steps/sec + time-per-epoch (the paper's
+# actual deliverable — its speedup curves are epoch times, Tables 8/9) for
+# the three Table-2 nets, at superstep K in {1, 8, 32}, Pallas kernels
+# on/off.  First end-to-end point on the perf trajectory (BENCH_train.json).
+# ---------------------------------------------------------------------------
+EPOCH_IMAGES = 60_000  # paper's MNIST train-set size
+TRAIN_BATCH = 8
+
+
+def bench_train(quick=False):
+    import dataclasses as DC
+
+    import repro.configs as C
+    from repro.core.chaos import SyncConfig
+    from repro.data.mnist import make_dataset
+    from repro.data.pipeline import ImagePipeline
+    from repro.train.step import (init_train_state, make_optimizer,
+                                  make_superstep)
+
+    nets = ["chaos-small"] if quick else ["chaos-small", "chaos-medium",
+                                          "chaos-large"]
+    supersteps = [1, 8, 32]
+    imgs, labels = make_dataset(512, seed=0)
+    detail = []
+    for net in nets:
+        base_cfg = C.get(net)
+        for use_kernel in (False, True):
+            cfg = DC.replace(base_cfg, use_kernel=use_kernel)
+            sync = SyncConfig("bsp")
+            opt = make_optimizer(cfg, total_steps=4096)
+            super_fn = jax.jit(make_superstep(cfg, sync, opt),
+                               donate_argnums=(0,))
+            pipe = ImagePipeline(imgs, labels, batch=TRAIN_BATCH,
+                                 sample_mode="queue")
+            # interpret-mode Pallas is orders slower on CPU: measure fewer
+            # steps there (the K-scaling ratio is what matters, not the
+            # absolute interpreter floor)
+            target = (8 if quick else 16) if use_kernel else 64
+            by_k = {}
+            for K in supersteps:
+                state = init_train_state(cfg, jax.random.key(0), sync, opt)
+                step = 0
+                measured_steps = 0
+                elapsed = 0.0
+                while measured_steps < target:
+                    # mirror the driver: host batch build + device transfer
+                    # + one dispatch + ONE host sync on the (K,) loss vector
+                    t0 = time.perf_counter()
+                    batch = jax.device_put(pipe.superstep_at(step, K))
+                    state, metrics = super_fn(state, batch)
+                    np.asarray(metrics["loss"])
+                    dt = time.perf_counter() - t0
+                    if step > 0:  # first dispatch = compile, not timed
+                        elapsed += dt
+                        measured_steps += K
+                    step += K
+                us_per_step = elapsed / measured_steps * 1e6
+                sps = 1e6 / us_per_step
+                epoch_min = (EPOCH_IMAGES / TRAIN_BATCH) * (us_per_step
+                                                            / 1e6) / 60
+                by_k[K] = us_per_step
+                kind = "kernel" if use_kernel else "xla"
+                row(f"train/{net}/{kind}/K{K}", us_per_step,
+                    f"{sps:.1f}steps_per_s_epoch~{epoch_min:.2f}min")
+                detail.append({
+                    "net": net, "use_kernel": use_kernel, "superstep": K,
+                    "us_per_step": us_per_step, "steps_per_s": sps,
+                    "epoch_min": epoch_min,
+                    "batch": TRAIN_BATCH, "measured_steps": measured_steps,
+                })
+            kind = "kernel" if use_kernel else "xla"
+            row(f"train/{net}/{kind}/superstep_speedup", by_k[1],
+                f"K32_vs_K1_{by_k[1] / by_k[32]:.2f}x")
+    return {"runs": detail, "epoch_images": EPOCH_IMAGES}
+
+
+# ---------------------------------------------------------------------------
 # Roofline table from the dry-run results (deliverable g summary)
 # ---------------------------------------------------------------------------
 def bench_roofline(quick=False):
@@ -279,6 +356,7 @@ def main():
         "perf_model": bench_perf_model,
         "sync_modes": bench_sync_modes,
         "kernels": bench_kernels,
+        "train": bench_train,
         "roofline": bench_roofline,
         "serving": bench_serving,
     }

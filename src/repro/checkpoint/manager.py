@@ -35,6 +35,9 @@ class CheckpointManager:
 
     # -- save ---------------------------------------------------------------
     def save(self, step: int, state: Any, blocking: bool = True):
+        # never run two writers at once: a pending async save for the same
+        # step would share (and race on) this save's tmp.<step> directory
+        self.wait()
         leaves, treedef = _flatten(state)
         # device -> host now; non-native dtypes (bfloat16) are stored as
         # float32 (lossless upcast) and cast back on restore
@@ -47,7 +50,6 @@ class CheckpointManager:
         if blocking:
             self._write(step, host_leaves, treedef)
         else:
-            self.wait()
             self._thread = threading.Thread(
                 target=self._write, args=(step, host_leaves, treedef))
             self._thread.start()

@@ -22,7 +22,12 @@ Three modes, all usable by any architecture in the zoo:
             preserves CHAOS's "local updates are instant" property exactly
             (each worker trains on its freshest local weights) at the price
             of K-step weight divergence.  Implemented with an explicit
-            replica axis via shard_map (replicas must fit per-device).
+            replica axis via shard_map (replicas must fit per-device); the
+            pjit train-step path runs the K-boundary average through
+            ``localsgd_average`` (identity under plain jit, pmean over
+            ``SyncConfig.axis_name`` under shard_map), keyed off the
+            scan-carried step counter, so the mode composes with the
+            superstep scan (DESIGN.md §3).
 
 All modes keep the *semantics deterministic* — unlike racy shared-memory
 Hogwild, the same run reproduces bit-exactly, which is how we check the
@@ -43,6 +48,11 @@ class SyncConfig:
     mode: str = "bsp"            # bsp | chaos | localsgd
     local_steps: int = 8         # K for localsgd
     compress: bool = False       # bf16 gradient exchange w/ error feedback
+    #: named mesh axis for the pjit-path localsgd parameter average; None
+    #: (plain jit / single replica) makes the average an identity, but the
+    #: K-step counter carry and the where-select still execute, so the
+    #: superstep scan carry is exercised identically on 1 or N replicas.
+    axis_name: Optional[str] = None
 
 
 def zeros_like_f32(tree):
@@ -65,6 +75,22 @@ def init_sync_state(sync: SyncConfig, params):
     if sync.compress:
         st["residual"] = zeros_like_f32(params)
     return st
+
+
+def localsgd_average(sync: SyncConfig, params, step):
+    """Paper strategy-C boundary: every ``local_steps``-th step the replicas'
+    parameters are averaged over ``sync.axis_name``.  The boundary derives
+    from the (scan-carried, checkpointed) step counter — same arithmetic as
+    the shard_map worker path — so no extra sync state is needed.  Under
+    plain jit (axis_name=None, e.g. single logical device or implicit SPMD)
+    the average is the identity but the select still runs.  Returns the new
+    params."""
+    do_avg = ((step + 1) % sync.local_steps) == 0
+    if sync.axis_name is not None:
+        avg = jax.tree.map(lambda p: jax.lax.pmean(p, sync.axis_name), params)
+    else:
+        avg = params
+    return jax.tree.map(lambda p, a: jnp.where(do_avg, a, p), params, avg)
 
 
 def compress_grads(grads, residual):

@@ -65,6 +65,7 @@ class ArchConfig:
     n_classes: int = 10
 
     # training knobs
+    use_kernel: bool = False     # cnn: route hot path through Pallas kernels
     micro_batches: int = 1       # gradient-accumulation steps per batch
     param_dtype: str = "bfloat16"
     opt_moment_dtype: str = "float32"

@@ -7,12 +7,22 @@
   takes every k-th sample — no static partitioning).
 - Both support exact resume from a step counter (fault tolerance: the
   checkpoint stores the step; the pipeline is a pure function of it).
+- Both produce stacked **superstep** batches — ``superstep_at(step, k)``
+  returns a (k, B, ...) pytree whose slice ``i`` is bit-identical to
+  ``batch_at(step + i)``, so a K-step ``lax.scan`` superstep consumes the
+  exact same sample sequence as K individual steps (resume == replay
+  survives any K).
 """
 from __future__ import annotations
 
 import dataclasses
 
 import numpy as np
+
+
+def _stack_batches(batches):
+    """Stack a list of same-structure dict batches along a new axis 0."""
+    return {k: np.stack([b[k] for b in batches]) for k in batches[0]}
 
 
 @dataclasses.dataclass
@@ -41,6 +51,10 @@ class TokenPipeline:
         labels = np.roll(tokens, -1, axis=1)
         return {"tokens": tokens, "labels": labels}
 
+    def superstep_at(self, step: int, k: int):
+        """Stacked (k, B, T) batch covering steps [step, step + k)."""
+        return _stack_batches([self.batch_at(step + i) for i in range(k)])
+
 
 @dataclasses.dataclass
 class ImagePipeline:
@@ -48,12 +62,46 @@ class ImagePipeline:
     labels: np.ndarray
     batch: int
     seed: int = 0
+    #: "iid"   — each batch is an independent uniform draw (legacy default);
+    #: "queue" — the paper's shared-queue semantics: per epoch one global
+    #:           permutation is the queue and batch lane w acts as worker w
+    #:           taking every batch-th sample (queue[w::batch]), so the
+    #:           in-epoch step-t batch is the contiguous chunk
+    #:           queue[t*B:(t+1)*B] — workers that finish early just take
+    #:           the next image, no static split (straggler-friendly).
+    sample_mode: str = "iid"
+    # last (epoch, permutation) — queue_batch_at is a pure function of the
+    # step, so this is purely a recomputation cache (superstep_at would
+    # otherwise re-permute the whole dataset K times per chunk)
+    _epoch_cache: tuple | None = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def batch_at(self, step: int):
+        if self.sample_mode == "queue":
+            return self.queue_batch_at(step)
         rng = np.random.default_rng(
             np.random.SeedSequence([self.seed, step]))
         idx = rng.integers(0, len(self.images), size=self.batch)
         return {"images": self.images[idx], "labels": self.labels[idx]}
+
+    def queue_batch_at(self, step: int):
+        """Paper worker semantics as a pure function of `step`: epoch e's
+        permutation is the shared queue; lane w of the batch takes
+        queue[w + t*B] at in-epoch step t (its every-B-th sample)."""
+        steps_per_epoch = max(len(self.images) // self.batch, 1)
+        epoch, t = divmod(step, steps_per_epoch)
+        if self._epoch_cache is None or self._epoch_cache[0] != epoch:
+            rng = np.random.default_rng(
+                np.random.SeedSequence([self.seed, epoch]))
+            self._epoch_cache = (epoch, rng.permutation(len(self.images)))
+        order = self._epoch_cache[1]
+        lo = (t * self.batch) % len(self.images)
+        idx = np.resize(order, lo + self.batch)[lo:lo + self.batch]
+        return {"images": self.images[idx], "labels": self.labels[idx]}
+
+    def superstep_at(self, step: int, k: int):
+        """Stacked (k, B, H, W, C) batch covering steps [step, step + k)."""
+        return _stack_batches([self.batch_at(step + i) for i in range(k)])
 
     def worker_batches(self, step: int, n_workers: int, per_worker: int):
         """Paper-style shared queue: worker w takes samples

@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import conv2d as K
+from repro.kernels import fc as FCK
 
 _MEM: dict[str, dict] = {}
 # one-shot disk snapshot so cache misses on the eager hot path don't
@@ -48,6 +49,8 @@ VMEM_BUDGET_BYTES = int(os.environ.get("REPRO_VMEM_BUDGET", 12 * 2 ** 20))
 
 BASELINE = {"batch_block": 8, "row_block": None, "cout_block": None}
 BWD_BASELINE = {"batch_block": 8, "row_block": None}
+FC_BASELINE = {"batch_block": 8, "dout_block": None}
+FC_BWD_BASELINE = {"batch_block": 8}
 
 
 def cache_path() -> str:
@@ -191,6 +194,55 @@ def conv_bwd_candidates(x_shape, w_shape, itemsize: int = 4) -> list[dict]:
     return _dedup(cands)
 
 
+def fc_fwd_vmem_bytes(cfg, x_shape, w_shape, itemsize: int = 4) -> int:
+    """Bytes per grid step: x row block + w column block + bias block +
+    the output tile and its fp32 accumulator."""
+    B, Din = x_shape
+    _, Dout = w_shape
+    bb = K._divisor_block(B, cfg["batch_block"])
+    db = K._divisor_block(Dout, cfg["dout_block"])
+    return (bb * Din * itemsize + Din * db * itemsize + db * itemsize
+            + bb * db * (itemsize + 4))
+
+
+def fc_bwd_vmem_bytes(cfg, x_shape, w_shape, itemsize: int = 4,
+                      fused_tanh: bool = True) -> int:
+    B, Din = x_shape
+    _, Dout = w_shape
+    bb = K._divisor_block(B, cfg["batch_block"])
+    return (bb * Din * itemsize                      # x block
+            + bb * Dout * itemsize * (2 if fused_tanh else 1)  # dy (+ y)
+            + Din * Dout * (itemsize + 4)            # w + dw scratch
+            + Dout * 4                               # db scratch
+            + bb * Din * itemsize)                   # dx block
+
+
+def fc_fwd_candidates(x_shape, w_shape, itemsize: int = 4) -> list[dict]:
+    B, _ = x_shape
+    _, Dout = w_shape
+    cands = [dict(FC_BASELINE)]
+    for bb in _divisors(B, 64):
+        for db in _divisors(Dout, 512):
+            if db % 8 and db != Dout:  # keep lane-friendly column blocks
+                continue
+            cfg = {"batch_block": bb, "dout_block": db}
+            if fc_fwd_vmem_bytes(cfg, x_shape, w_shape,
+                                 itemsize) <= VMEM_BUDGET_BYTES:
+                cands.append(cfg)
+    return _dedup(cands)
+
+
+def fc_bwd_candidates(x_shape, w_shape, itemsize: int = 4) -> list[dict]:
+    B, _ = x_shape
+    cands = [dict(FC_BWD_BASELINE)]
+    for bb in _divisors(B, 64):
+        cfg = {"batch_block": bb}
+        if fc_bwd_vmem_bytes(cfg, x_shape, w_shape,
+                             itemsize) <= VMEM_BUDGET_BYTES:
+            cands.append(cfg)
+    return _dedup(cands)
+
+
 def _dedup(cands: list[dict]) -> list[dict]:
     seen, out = set(), []
     for c in cands:
@@ -247,6 +299,37 @@ def default_conv_bwd(x_shape, w_shape, itemsize: int = 4) -> dict:
     return cfg
 
 
+def default_fc_fwd(x_shape, w_shape, itemsize: int = 4) -> dict:
+    """Largest whole-row baseline that fits VMEM, shrinking the output
+    column block first, then the batch block."""
+    B, _ = x_shape
+    _, Dout = w_shape
+    cfg = dict(FC_BASELINE)
+    for db in reversed(_divisors(Dout)):
+        cfg["dout_block"] = db
+        if fc_fwd_vmem_bytes(cfg, x_shape, w_shape,
+                             itemsize) <= VMEM_BUDGET_BYTES:
+            return cfg
+    cfg["dout_block"] = 1
+    for bb in reversed(_divisors(min(B, 8))):
+        cfg["batch_block"] = bb
+        if fc_fwd_vmem_bytes(cfg, x_shape, w_shape,
+                             itemsize) <= VMEM_BUDGET_BYTES:
+            return cfg
+    return cfg
+
+
+def default_fc_bwd(x_shape, w_shape, itemsize: int = 4) -> dict:
+    B, _ = x_shape
+    cfg = dict(FC_BWD_BASELINE)
+    for bb in reversed(_divisors(min(B, 8))):
+        cfg["batch_block"] = bb
+        if fc_bwd_vmem_bytes(cfg, x_shape, w_shape,
+                             itemsize) <= VMEM_BUDGET_BYTES:
+            return cfg
+    return cfg
+
+
 def get_conv_fwd_config(x_shape, w_shape, dtype, *, interpret: bool,
                         variant: str = "plain") -> dict:
     entry = lookup(key_for("conv_fwd", (x_shape, w_shape), dtype,
@@ -263,6 +346,24 @@ def get_conv_bwd_config(x_shape, w_shape, dtype, *, interpret: bool,
     if entry is not None:
         return entry["config"]
     return default_conv_bwd(x_shape, w_shape, jnp.dtype(dtype).itemsize)
+
+
+def get_fc_fwd_config(x_shape, w_shape, dtype, *, interpret: bool,
+                      variant: str = "plain") -> dict:
+    entry = lookup(key_for("fc_fwd", (x_shape, w_shape), dtype,
+                           interpret=interpret, variant=variant))
+    if entry is not None:
+        return entry["config"]
+    return default_fc_fwd(x_shape, w_shape, jnp.dtype(dtype).itemsize)
+
+
+def get_fc_bwd_config(x_shape, w_shape, dtype, *, interpret: bool,
+                      variant: str = "plain") -> dict:
+    entry = lookup(key_for("fc_bwd", (x_shape, w_shape), dtype,
+                           interpret=interpret, variant=variant))
+    if entry is not None:
+        return entry["config"]
+    return default_fc_bwd(x_shape, w_shape, jnp.dtype(dtype).itemsize)
 
 
 # ---------------------------------------------------------------------------
@@ -327,5 +428,57 @@ def tune_conv_bwd(x, dy, w, y=None, *, interpret: bool = True,
     record(key, best, measured[best_key], measured, iters=iters)
     return best, {"key": key, "best_us": measured[best_key],
                   "baseline_us": measured[json.dumps(dict(BWD_BASELINE),
+                                                     sort_keys=True)],
+                  "candidates": measured}
+
+
+def tune_fc_fwd(x, w, bias=None, *, activation: str | None = None,
+                interpret: bool = True, iters: int = 3,
+                max_candidates: int | None = None):
+    """Measure all pruned candidates for the fused FC forward; cache +
+    return ``(best_config, report)``.  Same contract as the conv tuners:
+    the batch_block=8 whole-row baseline is always measured."""
+    variant = "bias_tanh" if activation == "tanh" else "plain"
+    key = key_for("fc_fwd", (x.shape, w.shape), x.dtype,
+                  interpret=interpret, variant=variant)
+    cands = fc_fwd_candidates(x.shape, w.shape, x.dtype.itemsize)
+    if max_candidates:
+        cands = cands[:max_candidates]
+    measured = {}
+    for cfg in cands:
+        fn = jax.jit(lambda x, w, cfg=cfg: FCK.fc_fwd(
+            x, w, bias, activation=activation, interpret=interpret, **cfg))
+        measured[json.dumps(cfg, sort_keys=True)] = _time_us(
+            fn, x, w, iters=iters)
+    best_key = min(measured, key=measured.get)
+    best = json.loads(best_key)
+    record(key, best, measured[best_key], measured, iters=iters)
+    return best, {"key": key, "best_us": measured[best_key],
+                  "baseline_us": measured[json.dumps(dict(FC_BASELINE),
+                                                     sort_keys=True)],
+                  "candidates": measured}
+
+
+def tune_fc_bwd(x, dy, w, y=None, *, interpret: bool = True, iters: int = 3,
+                max_candidates: int | None = None):
+    """Measure candidates for the fused FC backward (dtanh-fused when ``y``
+    is given); cache + return ``(best_config, report)``."""
+    variant = "dtanh" if y is not None else "plain"
+    key = key_for("fc_bwd", (x.shape, w.shape), x.dtype,
+                  interpret=interpret, variant=variant)
+    cands = fc_bwd_candidates(x.shape, w.shape, x.dtype.itemsize)
+    if max_candidates:
+        cands = cands[:max_candidates]
+    measured = {}
+    for cfg in cands:
+        fn = jax.jit(lambda x, dy, w, cfg=cfg: FCK.fc_bwd_fused(
+            x, dy, w, y, interpret=interpret, **cfg))
+        measured[json.dumps(cfg, sort_keys=True)] = _time_us(
+            fn, x, dy, w, iters=iters)
+    best_key = min(measured, key=measured.get)
+    best = json.loads(best_key)
+    record(key, best, measured[best_key], measured, iters=iters)
+    return best, {"key": key, "best_us": measured[best_key],
+                  "baseline_us": measured[json.dumps(dict(FC_BWD_BASELINE),
                                                      sort_keys=True)],
                   "candidates": measured}

@@ -20,8 +20,11 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.kernels import autotune as AT
 from repro.kernels import conv2d as K
+from repro.kernels import fc as FC
 from repro.kernels import pool as P
 
 
@@ -112,3 +115,86 @@ def _mp_bwd(k, res, dy):
 
 
 maxpool2d.defvjp(_mp_fwd, _mp_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Fused FC layers (matmul + bias [+ tanh]) — the CNN tail (kernels/fc.py)
+# ---------------------------------------------------------------------------
+def _fcf_cfg(x, w, variant="plain"):
+    return AT.get_fc_fwd_config(x.shape, w.shape, x.dtype,
+                                interpret=_interpret(), variant=variant)
+
+
+def _fcb_cfg(x, w, variant="plain"):
+    return AT.get_fc_bwd_config(x.shape, w.shape, x.dtype,
+                                interpret=_interpret(), variant=variant)
+
+
+@jax.custom_vjp
+def fc_bias_tanh(x, w, b):
+    """tanh(x @ w + b) in one forward launch; one fused backward launch
+    (dtanh + dx + dw + db)."""
+    return FC.fc_fwd(x, w, b, activation="tanh", interpret=_interpret(),
+                     **_fcf_cfg(x, w, "bias_tanh"))
+
+
+def _fbt_fwd(x, w, b):
+    y = fc_bias_tanh(x, w, b)
+    return y, (x, w, b, y)
+
+
+def _fbt_bwd(res, dy):
+    x, w, b, y = res
+    dx, dw, db = FC.fc_bwd_fused(x, dy, w, y, interpret=_interpret(),
+                                 **_fcb_cfg(x, w, "dtanh"))
+    return dx.astype(x.dtype), dw.astype(w.dtype), db.astype(b.dtype)
+
+
+fc_bias_tanh.defvjp(_fbt_fwd, _fbt_bwd)
+
+
+@jax.custom_vjp
+def fc_bias(x, w, b):
+    """x @ w + b (linear output layer) — fused forward, fused backward."""
+    return FC.fc_fwd(x, w, b, activation=None, interpret=_interpret(),
+                     **_fcf_cfg(x, w, "plain"))
+
+
+def _fb_fwd(x, w, b):
+    return fc_bias(x, w, b), (x, w, b)
+
+
+def _fb_bwd(res, dy):
+    x, w, b = res
+    dx, dw, db = FC.fc_bwd_fused(x, dy, w, interpret=_interpret(),
+                                 **_fcb_cfg(x, w, "plain"))
+    return dx.astype(x.dtype), dw.astype(w.dtype), db.astype(b.dtype)
+
+
+fc_bias.defvjp(_fb_fwd, _fb_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Fused softmax-cross-entropy: per-sample loss, dlogits saved as residual
+# so the backward costs ZERO extra launches
+# ---------------------------------------------------------------------------
+@jax.custom_vjp
+def softmax_xent(logits, labels):
+    """Per-sample CE loss (B,) for logits (B, C) and int labels (B,)."""
+    loss, _ = FC.softmax_xent_fwd(logits, labels, interpret=_interpret())
+    return loss
+
+
+def _sx_fwd(logits, labels):
+    loss, dl = FC.softmax_xent_fwd(logits, labels, interpret=_interpret())
+    return loss, (dl, labels.shape)
+
+
+def _sx_bwd(res, g):
+    dl, lab_shape = res
+    # labels are integer-valued: their cotangent is the symbolic float0 zero
+    return (dl * g[:, None].astype(dl.dtype),
+            np.zeros(lab_shape, dtype=jax.dtypes.float0))
+
+
+softmax_xent.defvjp(_sx_fwd, _sx_bwd)

@@ -4,11 +4,14 @@ Faithful to Cireşan-style nets used in the paper: valid convolutions,
 max-pooling, tanh hidden activations, softmax output, MSE-free CE loss,
 SGD with the paper's decay schedule (eta0=0.001, x0.9 per epoch).
 
-``use_kernel=True`` routes the conv -> tanh -> pool hot path through the
-fused, autotuned Pallas TPU kernels (`repro.kernels.ops`) — the
-SIMD-vectorisation analogue (DESIGN.md §2, §Kernels): one fused
-conv+bias+tanh launch forward and one fused dx+dw+db launch backward per
-conv layer, plus Pallas max-pool both ways.
+``use_kernel=True`` (argument, or ``cfg.use_kernel`` when the argument is
+left as None) routes the WHOLE hot path through the fused, autotuned
+Pallas TPU kernels (`repro.kernels.ops`) — the SIMD-vectorisation
+analogue (DESIGN.md §2, §Kernels): one fused conv+bias+tanh launch
+forward and one fused dx+dw+db launch backward per conv layer, Pallas
+max-pool both ways, one fused matmul+bias(+tanh) launch per FC layer
+each way, and a fused softmax-cross-entropy kernel whose backward reuses
+the saved dlogits (zero extra launches).
 """
 from __future__ import annotations
 
@@ -72,15 +75,21 @@ def build_params(cfg: ArchConfig, f):
     return params
 
 
-def forward(params, images, cfg: ArchConfig, use_kernel: bool = False):
+def _use_kernel(cfg: ArchConfig, use_kernel):
+    return cfg.use_kernel if use_kernel is None else use_kernel
+
+
+def forward(params, images, cfg: ArchConfig, use_kernel: bool | None = None):
     """images: (B, H, W, 1) float32 in [0,1].  Returns (B, n_classes) logits."""
     x = images
-    if use_kernel:
+    uk = _use_kernel(cfg, use_kernel)
+    if uk:
         from repro.kernels import ops as kops
-    for i, (kind, k, _, cin, cout) in enumerate(_trace_shapes(cfg)):
+    shapes = _trace_shapes(cfg)
+    for i, (kind, k, _, cin, cout) in enumerate(shapes):
         if kind == "conv":
             p = params[f"conv{i}"]
-            if use_kernel:
+            if uk:
                 x = kops.conv2d_bias_tanh(x, p["w"], p["b"])
             else:
                 x = jnp.tanh(jax.lax.conv_general_dilated(
@@ -88,7 +97,7 @@ def forward(params, images, cfg: ArchConfig, use_kernel: bool = False):
                     dimension_numbers=("NHWC", "HWIO", "NHWC")) + p["b"])
         elif kind == "pool":
             if k > 1:
-                if use_kernel:
+                if uk:
                     x = kops.maxpool2d(x, k)
                 else:
                     x = jax.lax.reduce_window(
@@ -98,19 +107,29 @@ def forward(params, images, cfg: ArchConfig, use_kernel: bool = False):
             p = params[f"fc{i}"]
             if x.ndim > 2:
                 x = x.reshape(x.shape[0], -1)
-            x = x @ p["w"] + p["b"]
-            if i < len(_trace_shapes(cfg)) - 1:
-                x = jnp.tanh(x)
+            last = i == len(shapes) - 1
+            if uk:
+                x = (kops.fc_bias(x, p["w"], p["b"]) if last
+                     else kops.fc_bias_tanh(x, p["w"], p["b"]))
+            else:
+                x = x @ p["w"] + p["b"]
+                if not last:
+                    x = jnp.tanh(x)
     return x
 
 
-def loss_fn(params, batch, cfg: ArchConfig, use_kernel: bool = False):
-    logits = forward(params, batch["images"], cfg, use_kernel=use_kernel)
+def loss_fn(params, batch, cfg: ArchConfig, use_kernel: bool | None = None):
+    uk = _use_kernel(cfg, use_kernel)
+    logits = forward(params, batch["images"], cfg, use_kernel=uk)
     labels = batch["labels"]
     logits = logits.astype(jnp.float32)
-    lse = jax.nn.logsumexp(logits, axis=-1)
-    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
-    loss = jnp.mean(lse - ll)
+    if uk:
+        from repro.kernels import ops as kops
+        loss = jnp.mean(kops.softmax_xent(logits, labels))
+    else:
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        loss = jnp.mean(lse - ll)
     err = jnp.mean((jnp.argmax(logits, -1) != labels).astype(jnp.float32))
     return loss, {"ce": loss, "error_rate": err,
                   "aux": jnp.zeros((), jnp.float32)}

@@ -2,6 +2,8 @@
 optimizers, and sharding.
 
 ``make_train_step(cfg, sync)``  -> (step_fn, TrainState helpers)
+``make_superstep(cfg, sync)``   -> K steps per dispatch via lax.scan over a
+                                   stacked (K, B, ...) batch (DESIGN.md §3)
 ``make_serve_step(cfg)``        -> decode step over a KV/state cache
 """
 from __future__ import annotations
@@ -13,7 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.chaos import SyncConfig, init_sync_state, transform_grads
+from repro.core.chaos import (SyncConfig, init_sync_state, localsgd_average,
+                              transform_grads)
 from repro.core.schedule import make_lr_fn
 from repro.core.types import ArchConfig
 from repro.models import layers as ML
@@ -61,7 +64,10 @@ def state_specs(cfg: ArchConfig, sync: SyncConfig, optimizer=None):
     opt_abs = jax.eval_shape(optimizer.init, abstract)
     sync_abs = jax.eval_shape(lambda p: init_sync_state(sync, p), abstract)
     opt_specs = {k: pspecs for k in opt_abs} if isinstance(opt_abs, dict) else {}
-    sync_specs = {k: pspecs for k in sync_abs}
+    # params-shaped sync buffers mirror param sharding; scalar carries
+    # (localsgd's local_t counter) are replicated
+    sync_specs = {k: (pspecs if isinstance(v, dict) else P())
+                  for k, v in sync_abs.items()}
     return {"params": pspecs, "opt": opt_specs, "sync": sync_specs,
             "step": P()}
 
@@ -138,6 +144,11 @@ def make_train_step(cfg: ArchConfig, sync: SyncConfig, optimizer=None):
             g_apply, new_sync = transform_grads(sync, grads, state["sync"])
             new_params, new_opt = optimizer.apply(params, g_apply,
                                                   state["opt"], state["step"])
+            if sync.mode == "localsgd":
+                # strategy-C boundary: average params every local_steps,
+                # keyed off the scan-carried step counter
+                new_params = localsgd_average(sync, new_params,
+                                              state["step"])
 
         new_state = {"params": new_params, "opt": new_opt, "sync": new_sync,
                      "step": state["step"] + 1}
@@ -145,6 +156,29 @@ def make_train_step(cfg: ArchConfig, sync: SyncConfig, optimizer=None):
         return new_state, metrics
 
     return step
+
+
+def make_superstep(cfg: ArchConfig, sync: SyncConfig, optimizer=None):
+    """Returns superstep(state, batches) -> (new_state, metrics).
+
+    ``batches`` is a stacked (K, B, ...) pytree (``pipeline.superstep_at``);
+    the K constituent steps run inside ONE compiled ``jax.lax.scan``, so the
+    host dispatches (and syncs on metrics) once per K steps instead of once
+    per step.  The whole TrainState — params, optimizer moments, CHAOS sync
+    buffers (prev_grad / residual), and the step counter that drives the
+    LR schedule and localsgd boundary — is the scan carry, so all sync modes
+    compose unchanged and the result is bit-identical to K individual
+    dispatches (tests/test_superstep.py).  Metrics come back stacked (K,).
+
+    jit with ``donate_argnums=(0,)``: the TrainState is donated so a
+    superstep is update-in-place at the HBM level.
+    """
+    step = make_train_step(cfg, sync, optimizer)
+
+    def superstep(state, batches):
+        return jax.lax.scan(step, state, batches)
+
+    return superstep
 
 
 def make_serve_step(cfg: ArchConfig):
