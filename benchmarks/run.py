@@ -294,6 +294,71 @@ def bench_train(quick=False):
 
 
 # ---------------------------------------------------------------------------
+# Result 3 / Tables 7-9 measured analogue: CHAOS worker scaling.  Runs the
+# worker-mesh superstep path (shard_map over forced host devices) for the
+# three Table-2 nets x 3 sync modes x workers {1,2,4,8} x kernels on/off in
+# ONE subprocess (XLA_FLAGS must be set before jax initialises), then puts
+# measured speedup next to the paper's performance-model prediction.
+# ---------------------------------------------------------------------------
+SCALING_DEVICES = 8
+
+
+def bench_scaling(quick=False):
+    import re
+    import subprocess
+
+    from repro.core import perf_model as pm
+
+    env = dict(os.environ)
+    flags = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
+                   env.get("XLA_FLAGS", "")).strip()
+    env["XLA_FLAGS"] = (f"{flags} --xla_force_host_platform_device_count="
+                        f"{SCALING_DEVICES}").strip()
+    env["PYTHONPATH"] = (os.path.join(os.path.dirname(__file__), "..", "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    cmd = [sys.executable, "-m", "benchmarks.scaling"]
+    if quick:
+        cmd.append("--quick")
+    # stdout (the JSON document) is captured; stderr is inherited so the
+    # subprocess's per-cell progress lines stream live — a full grid runs
+    # for a long time and silent buffering would hide all progress
+    out = subprocess.run(cmd, stdout=subprocess.PIPE, text=True, env=env,
+                         cwd=os.path.join(os.path.dirname(__file__), ".."),
+                         timeout=14000)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"scaling subprocess failed with rc={out.returncode} "
+            f"(its stderr streamed above)")
+    runs = json.loads(out.stdout)["runs"]
+
+    paper_arch = {"chaos-small": "small", "chaos-medium": "medium",
+                  "chaos-large": "large"}
+    base = {(r["net"], r["mode"], r["use_kernel"]): r["steps_per_s"]
+            for r in runs if r["workers"] == 1}
+    for r in runs:
+        b = base.get((r["net"], r["mode"], r["use_kernel"]))
+        # nan, not None: a missing N=1 baseline (edited worker sweep,
+        # partial run) must not crash the row formatting below and throw
+        # away an hours-long measurement
+        r["speedup_vs_1"] = r["steps_per_s"] / b if b else float("nan")
+        # paper performance-model cross-check: N workers ~ N Phi threads
+        r["model_speedup"] = pm.predict_speedup(paper_arch[r["net"]],
+                                                r["workers"])
+        kind = "kernel" if r["use_kernel"] else "xla"
+        row(f"scaling/{r['net']}/{r['mode']}/{kind}/N{r['workers']}",
+            r["us_per_step"],
+            f"{r['steps_per_s']:.1f}steps_per_s_speedup="
+            f"{r['speedup_vs_1']:.2f}x_model={r['model_speedup']:.2f}x")
+    return {"runs": runs, "batch": runs[0]["batch"] if runs else None,
+            "superstep": runs[0]["superstep"] if runs else None,
+            "forced_devices": SCALING_DEVICES,
+            "note": "forced host devices share one CPU; speedup_vs_1 "
+                    "validates the worker path + overhead trend, "
+                    "model_speedup is the paper's Listing-2 prediction "
+                    "for the same worker count"}
+
+
+# ---------------------------------------------------------------------------
 # Roofline table from the dry-run results (deliverable g summary)
 # ---------------------------------------------------------------------------
 def bench_roofline(quick=False):
@@ -357,6 +422,7 @@ def main():
         "sync_modes": bench_sync_modes,
         "kernels": bench_kernels,
         "train": bench_train,
+        "scaling": bench_scaling,
         "roofline": bench_roofline,
         "serving": bench_serving,
     }

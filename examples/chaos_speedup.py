@@ -1,21 +1,24 @@
 """Paper reproduction: the CHAOS speedup/scalability study.
 
-Reproduces, from the performance model (Section 5.2) + measured worker-model
-runs on forced host devices:
-  - Fig 7/8-style speedup curves (vs 1 Xeon Phi thread),
-  - Table 8 (480..3840-thread predictions),
-  - Result 3 headline numbers,
-  - a *measured* multi-worker CHAOS run (4 host devices) demonstrating the
-    worker model (per-replica instances, delayed gradient exchange).
+Prints, side by side:
+  - Fig 7/8-style speedup curves predicted by the paper's performance
+    model (Section 5.2, Listing 2) and Table 8 (480..3840 threads),
+  - the MEASURED worker-scaling curves from ``BENCH_scaling.json``
+    (``benchmarks/run.py --only scaling``): the worker-mesh superstep
+    path run at 1/2/4/8 workers for the three Table-2 nets x three sync
+    modes, with the model's prediction for the same worker count,
+  - a live 4-worker CHAOS run through the production driver
+    (``repro.launch.train --workers 4``) on forced host devices.
 
     PYTHONPATH=src python examples/chaos_speedup.py
 """
+import json
 import os
 import subprocess
 import sys
-import textwrap
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+ROOT = os.path.join(os.path.dirname(__file__), "..")
 sys.path.insert(0, SRC)
 
 from repro.core import perf_model as pm
@@ -41,41 +44,65 @@ def model_curves():
         print(f"{'':7s} paper: {paper}")
 
 
-def measured_workers():
-    print("\n== measured: 4 CHAOS workers (forced host devices) ==")
-    code = textwrap.dedent("""
-        import jax, jax.numpy as jnp, time
-        from repro.core.chaos import SyncConfig, worker_train_fn, \\
-            replicate_for_workers, zeros_like_f32
-        from repro.launch.mesh import make_host_mesh
-        import repro.configs as C
-        from repro.models.api import get_ops
-        from repro.data.mnist import make_dataset
+def measured_curves(path=None):
+    """Measured steps/sec + speedup per worker count (BENCH_scaling.json)
+    printed next to the performance model's prediction for the same worker
+    count — the paper's measured-vs-modeled methodology (Figs 11-13)."""
+    path = path or os.path.join(ROOT, "BENCH_scaling.json")
+    print("\n== measured worker scaling (BENCH_scaling.json) ==")
+    if not os.path.exists(path):
+        print(f"  {path} not found — generate it with:\n"
+              f"    PYTHONPATH=src python -m benchmarks.run --only scaling")
+        return
+    with open(path) as f:
+        data = json.load(f)
+    runs = [r for r in data.get("runs", []) if not r.get("use_kernel")]
+    if not runs:
+        print("  no xla-path runs recorded")
+        return
+    print("  (forced host devices share one CPU: measured speedup shows "
+          "the\n   harness + overhead trend; 'model' is the paper's "
+          "prediction at N threads)")
+    for net in ("chaos-small", "chaos-medium", "chaos-large"):
+        net_runs = [r for r in runs if r["net"] == net]
+        if not net_runs:
+            continue
+        print(f"\n  {net}")
+        print(f"  {'mode':>9s} " + " ".join(
+            f"{'N=' + str(n):>16s}"
+            for n in sorted({r['workers'] for r in net_runs})))
+        for mode in ("bsp", "chaos", "localsgd"):
+            cells = []
+            for r in sorted((r for r in net_runs if r["mode"] == mode),
+                            key=lambda r: r["workers"]):
+                cells.append(f"{r['steps_per_s']:6.2f}st/s "
+                             f"{r['speedup_vs_1']:4.2f}x")
+            if cells:
+                print(f"  {mode:>9s} " + " ".join(f"{c:>16s}"
+                                                  for c in cells))
+        model = " ".join(
+            f"{pm.predict_speedup(net.split('-')[1], n):15.2f}x"
+            for n in sorted({r['workers'] for r in net_runs}))
+        print(f"  {'model':>9s} {model}")
 
-        cfg = C.get("chaos-small")
-        ops = get_ops(cfg)
-        n = 4
-        mesh = make_host_mesh(n)
-        imgs, labels = make_dataset(n * 16 * 12, seed=0)
-        params = ops.init(jax.random.key(0))
-        state = {"params": replicate_for_workers(params, n),
-                 "prev_grad": replicate_for_workers(zeros_like_f32(params), n),
-                 "step": jnp.zeros((n,), jnp.int32)}
-        fn = worker_train_fn(ops.loss, lambda s: 0.05, SyncConfig("chaos"), mesh)
-        for t in range(12):
-            lo = t * n * 16
-            b = {"images": imgs[lo:lo+n*16].reshape(n, 16, 29, 29, 1),
-                 "labels": labels[lo:lo+n*16].reshape(n, 16)}
-            state, m = fn(state, b)
-            print(f"  step {t:2d} worker-mean loss={float(m['loss']):.3f}")
-    """)
+
+def measured_workers():
+    """Live demo: 4 CHAOS workers through the production driver's
+    worker-mesh route (shard_map superstep; forced host devices)."""
+    print("\n== live: 4 CHAOS workers via repro.launch.train ==")
     env = dict(os.environ, PYTHONPATH=SRC,
                XLA_FLAGS="--xla_force_host_platform_device_count=4")
-    out = subprocess.run([sys.executable, "-c", code], env=env,
-                         capture_output=True, text=True, timeout=900)
-    print(out.stdout or out.stderr[-2000:])
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "chaos-small",
+         "--steps", "12", "--superstep", "4", "--workers", "4",
+         "--sync", "chaos"],
+        env=env, capture_output=True, text=True, timeout=900)
+    print(out.stdout)
+    if out.returncode != 0:
+        print(f"driver FAILED (rc={out.returncode}):\n{out.stderr[-2000:]}")
 
 
 if __name__ == "__main__":
     model_curves()
+    measured_curves()
     measured_workers()

@@ -106,6 +106,21 @@ class CheckpointManager:
         leaves_like, treedef = _flatten(like)
         n = len(leaves_like)
         arrs = [data[f"a{i}"] for i in range(n)]
+        # global shapes must match the template exactly — resharding restore
+        # changes device placement, never array shape.  Without this check a
+        # worker-stacked (N, ...) localsgd checkpoint restored under a
+        # different worker count would silently drop workers' diverged state
+        # downstream instead of erroring here.
+        for i, (a, l) in enumerate(zip(arrs, leaves_like)):
+            if hasattr(l, "shape") and tuple(a.shape) != tuple(l.shape):
+                raise ValueError(
+                    f"checkpoint leaf {i} has shape {a.shape} but the "
+                    f"restore template expects {l.shape}: the checkpoint "
+                    f"was written under a different state layout (e.g. a "
+                    f"stacked localsgd worker checkpoint resumed with a "
+                    f"different --workers — localsgd checkpoints pin the "
+                    f"worker count; bsp/chaos checkpoints are "
+                    f"worker-count-invariant)")
         # cast back through jnp: numpy lacks cast kernels for bf16 & friends
         arrs = [np.asarray(jax.numpy.asarray(a).astype(l.dtype))
                 if hasattr(l, "dtype") and a.dtype != l.dtype else a

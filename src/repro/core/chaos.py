@@ -130,6 +130,28 @@ def transform_grads(sync: SyncConfig, grads, sync_state):
 # localsgd).  Explicit collectives -> we control exactly when workers
 # synchronize, mirroring the paper's worker model.
 # ---------------------------------------------------------------------------
+def gathered_shard_mean(tree, axis_name: str, n_workers: int,
+                        n_shards: int):
+    """Worker-count-invariant mean of stacked per-shard gradients.
+
+    ``tree`` leaves are ``(n_shards / n_workers, ...)`` stacks of this
+    worker's micro-shard gradients.  Instead of ``pmean`` (whose reduction
+    tree depends on the worker count), every worker ``all_gather``s the
+    full ``(n_shards, ...)`` stack — deterministically concatenated in
+    axis-index order, which is exactly global shard order because worker w
+    owns the contiguous shard range [w*S/N, (w+1)*S/N) — and then reduces
+    it with one FIXED-shape ``sum`` over ``n_shards``.  The floating-point
+    reduction is therefore identical for every N dividing ``n_shards``,
+    which is what makes bsp/chaos updates (and their checkpoints) bit-exact
+    across worker counts (tests/test_worker_scaling.py)."""
+    if n_workers > 1:
+        tree = jax.tree.map(
+            lambda x: jax.lax.all_gather(x, axis_name, axis=0, tiled=True),
+            tree)
+    inv = 1.0 / n_shards
+    return jax.tree.map(lambda x: jnp.sum(x, axis=0) * inv, tree)
+
+
 def replicate_for_workers(tree, n: int):
     """Stack `n` copies along a leading replica axis."""
     return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n,) + x.shape),
@@ -138,7 +160,14 @@ def replicate_for_workers(tree, n: int):
 
 def make_worker_step(loss_fn: Callable, lr_fn: Callable, sync: SyncConfig,
                      axis_name: str = "workers"):
-    """Inner per-worker step for shard_map execution.
+    """LEGACY research harness — the production worker route is
+    ``train/step.py::make_worker_superstep`` (superstep scan inside
+    shard_map, optimizer/LR-schedule aware, worker-count-invariant bsp).
+    Kept because its chaos flavour is the OTHER point in the staleness
+    design space: local gradient applied instantly + remote gradients one
+    step late, vs the production path's fully-stale global exchange
+    (w_{t+1} = w_t - lr * mean_i g_i(w_{t-1})).  Exercised by
+    tests/test_chaos.py for semantics comparison only.
 
     state = {params, prev_grad?, step}; each worker holds its OWN params
     (replica axis sharded over `axis_name`).  Sync behaviour:

@@ -147,6 +147,43 @@ class ArchConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class WorkerConfig:
+    """CHAOS worker model: N per-device worker instances over a named mesh
+    axis (the paper's Phi threads -> forced host devices, DESIGN.md §4).
+
+    ``logical_shards`` decouples the *semantic* batch decomposition from the
+    *physical* worker count: the global batch is always split into
+    ``logical_shards`` fixed micro-shards whose gradients are combined with
+    a fixed-shape reduction, so any ``workers`` dividing ``logical_shards``
+    computes bit-identical bsp/chaos updates (worker-count-invariant
+    checkpoints; tests/test_worker_scaling.py)."""
+    workers: int = 1
+    axis: str = "workers"
+    logical_shards: int = 8
+
+    def __post_init__(self):
+        if self.workers < 1:
+            raise ValueError(f"workers must be >= 1, got {self.workers}")
+        if self.logical_shards % self.workers != 0:
+            raise ValueError(
+                f"workers={self.workers} must divide "
+                f"logical_shards={self.logical_shards} so every worker "
+                f"owns an equal number of micro-shards")
+
+    @property
+    def shards_per_worker(self) -> int:
+        return self.logical_shards // self.workers
+
+    def validate_batch(self, batch: int) -> None:
+        if batch % self.logical_shards != 0:
+            raise ValueError(
+                f"global batch {batch} must be divisible by "
+                f"logical_shards={self.logical_shards} "
+                f"(per-shard batch must be uniform for the fixed-shape "
+                f"worker reduction)")
+
+
+@dataclasses.dataclass(frozen=True)
 class ShapeConfig:
     name: str
     seq_len: int

@@ -25,6 +25,24 @@ def _stack_batches(batches):
     return {k: np.stack([b[k] for b in batches]) for k in batches[0]}
 
 
+def worker_slice(stacked: dict, batch: int, n_workers: int, worker: int):
+    """Worker w's shard of a stacked (K, B, ...) superstep batch: the
+    contiguous lane range [w*B/N, (w+1)*B/N) of every step.  Concatenating
+    the shards over w along axis 1 reconstructs the stacked batch exactly
+    (tests/test_pipeline_sharding.py), so N workers consume the SAME global
+    sample sequence as one — the paper's shared-queue semantics are
+    preserved bit-for-bit at any worker count."""
+    if not 0 <= worker < n_workers:
+        raise ValueError(f"worker {worker} out of range [0, {n_workers})")
+    if batch % n_workers != 0:
+        raise ValueError(
+            f"global batch {batch} must be divisible by n_workers="
+            f"{n_workers} for equal worker shards")
+    per = batch // n_workers
+    lo = worker * per
+    return {k: v[:, lo:lo + per] for k, v in stacked.items()}
+
+
 @dataclasses.dataclass
 class TokenPipeline:
     vocab_size: int
@@ -54,6 +72,13 @@ class TokenPipeline:
     def superstep_at(self, step: int, k: int):
         """Stacked (k, B, T) batch covering steps [step, step + k)."""
         return _stack_batches([self.batch_at(step + i) for i in range(k)])
+
+    def worker_superstep_at(self, step: int, k: int, n_workers: int,
+                            worker: int):
+        """Worker ``worker``'s (k, B/N, T) shard of ``superstep_at(step, k)``
+        — contiguous lanes, concat over workers == the global batch."""
+        return worker_slice(self.superstep_at(step, k), self.batch,
+                            n_workers, worker)
 
 
 @dataclasses.dataclass
@@ -102,6 +127,17 @@ class ImagePipeline:
     def superstep_at(self, step: int, k: int):
         """Stacked (k, B, H, W, C) batch covering steps [step, step + k)."""
         return _stack_batches([self.batch_at(step + i) for i in range(k)])
+
+    def worker_superstep_at(self, step: int, k: int, n_workers: int,
+                            worker: int):
+        """Worker ``worker``'s (k, B/N, H, W, C) shard of
+        ``superstep_at(step, k)``.  In queue mode this is exactly the
+        paper's shared-queue assignment: the step-t batch is the contiguous
+        queue chunk queue[tB:(t+1)B], and worker w takes the next B/N
+        images off it — no static split, and concat over workers
+        reconstructs the global batch bit-for-bit."""
+        return worker_slice(self.superstep_at(step, k), self.batch,
+                            n_workers, worker)
 
     def worker_batches(self, step: int, n_workers: int, per_worker: int):
         """Paper-style shared queue: worker w takes samples

@@ -482,3 +482,60 @@ def tune_fc_bwd(x, dy, w, y=None, *, interpret: bool = True, iters: int = 3,
                   "baseline_us": measured[json.dumps(dict(FC_BWD_BASELINE),
                                                      sort_keys=True)],
                   "candidates": measured}
+
+
+def tune_cnn_net(cfg, batch: int, *, iters: int = 1,
+                 interpret: bool | None = None):
+    """Tune every fused conv/FC kernel of a Table-2 CNN at the given batch
+    size, populating exactly the cache keys the training path looks up.
+
+    The worker-mesh route (DESIGN.md §4) shards the global batch into
+    ``WorkerConfig.logical_shards`` micro-shards, so its kernels run at a
+    per-shard batch (e.g. 1) whose autotune keys differ from the full-batch
+    keys ``benchmarks/run.py --only kernels`` populates — scaling runs call
+    this first so kernel-on cells measure tuned configs, not the heuristic
+    fallback.  Returns the list of cache keys written."""
+    from repro.models.cnn import _trace_shapes  # local: avoid import cycle
+
+    if interpret is None:
+        from repro.kernels import ops as kops
+        interpret = kops._interpret()
+    keys = []
+    h = cfg.cnn_input[0]  # input spatial size of the NEXT layer
+    kk = jax.random.key(0)
+    shapes = _trace_shapes(cfg)
+    for i, (kind, k, h_out, cin, cout) in enumerate(shapes):
+        if kind == "conv":
+            x = jax.random.normal(kk, (batch, h, h, cin), jnp.float32)
+            w = jax.random.normal(kk, (k, k, cin, cout), jnp.float32) * 0.1
+            b = jnp.zeros((cout,), jnp.float32)
+            dy = jax.random.normal(kk, (batch, h_out, h_out, cout),
+                                   jnp.float32)
+            y = jnp.tanh(dy)
+            _, rep = tune_conv_fwd(x, w, b, activation="tanh", iters=iters,
+                                   interpret=interpret)
+            keys.append(rep["key"])
+            _, rep = tune_conv_bwd(x, dy, w, y, iters=iters,
+                                   interpret=interpret)
+            keys.append(rep["key"])
+            h = h_out
+        elif kind == "pool":
+            h = h_out
+        else:  # fc — tanh epilogue on hidden layers, plain on the head
+            x = jax.random.normal(kk, (batch, cin), jnp.float32)
+            w = jax.random.normal(kk, (cin, cout), jnp.float32) * 0.1
+            b = jnp.zeros((cout,), jnp.float32)
+            dy = jax.random.normal(kk, (batch, cout), jnp.float32)
+            # positional, matching models/cnn.py::forward's head test —
+            # a hidden fc as wide as n_classes must still tune the tanh
+            # variants the model actually launches
+            last = i == len(shapes) - 1
+            act = None if last else "tanh"
+            _, rep = tune_fc_fwd(x, w, b, activation=act, iters=iters,
+                                 interpret=interpret)
+            keys.append(rep["key"])
+            _, rep = tune_fc_bwd(x, dy, w, None if last else jnp.tanh(dy),
+                                 iters=iters, interpret=interpret)
+            keys.append(rep["key"])
+            h = 1
+    return keys

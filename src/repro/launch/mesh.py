@@ -20,4 +20,10 @@ def make_host_mesh(n: int = None, axis: str = "workers"):
     CHAOS worker-model runs and tests."""
     devs = jax.devices()
     n = n or len(devs)
+    if n > len(devs):
+        raise ValueError(
+            f"requested a {n}-worker mesh but only {len(devs)} device(s) "
+            f"are visible; set XLA_FLAGS=--xla_force_host_platform_device_"
+            f"count={n} in the environment BEFORE jax initialises to force "
+            f"{n} host devices (tests/CI do this via subprocesses)")
     return jax.make_mesh((n,), (axis,), devices=devs[:n])

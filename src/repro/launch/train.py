@@ -20,6 +20,12 @@ Features (framework-scale runtime, DESIGN.md §3):
     deterministic data pipeline keyed by step (resume == replay, any K);
   - CHAOS sync modes (bsp | chaos | localsgd) for the gradient exchange —
     all three thread their sync state through the scan carry;
+  - WORKER MESH (--workers N, DESIGN.md §4): the superstep scan runs inside
+    shard_map over a 1-D worker mesh (the paper's Phi threads); each worker
+    consumes its contiguous shard of the shared-queue batch and the sync
+    mode's collectives ride the named worker axis.  bsp/chaos updates are
+    bit-exact for ANY worker count dividing --logical-shards, so their
+    checkpoints are worker-count-invariant (resume on fewer/more workers);
   - straggler watchdog: per-superstep wall-time z-score detection with a
     bounded flag log and a window matched to superstep granularity;
   - elastic re-meshing: on restore, arrays are placed under the *current*
@@ -45,8 +51,12 @@ import numpy as np
 import repro.configs as C
 from repro.checkpoint.manager import CheckpointManager
 from repro.core.chaos import SyncConfig
+from repro.core.types import WorkerConfig
 from repro.data.pipeline import ImagePipeline, TokenPipeline
-from repro.train.step import init_train_state, make_optimizer, make_superstep
+from repro.launch.mesh import make_host_mesh
+from repro.train.step import (init_train_state, init_worker_state,
+                              make_optimizer, make_superstep,
+                              make_worker_superstep)
 
 #: synthetic-MNIST pool size for CNN runs (offline container, DESIGN.md §6)
 CNN_DATASET_SIZE = 4096
@@ -95,18 +105,53 @@ def make_pipeline(cfg, batch: int, seq: int, seed: int = 0):
     return TokenPipeline(cfg.vocab_size, batch, seq, seed=seed)
 
 
+def put_worker_sharded(pipe, start: int, k: int, mesh, worker: WorkerConfig):
+    """Assemble the global stacked (K, B, ...) superstep batch worker-shard
+    by worker-shard: worker w's device receives exactly
+    ``pipe.worker_superstep_at(start, k, N, w)`` (its contiguous lanes of
+    the shared queue), and the shards are stitched into one global array
+    sharded P(None, workers) over the batch dim — in a real multi-host run
+    each host would build only its own shard."""
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    from repro.data.pipeline import worker_slice
+
+    n = worker.workers
+    # build the global stacked batch ONCE and slice per worker (slicing is
+    # what worker_superstep_at does; rebuilding it N times would put O(N)
+    # redundant host work on the prefetch hot path)
+    stacked = pipe.superstep_at(start, k)
+    b = next(iter(stacked.values())).shape[1]
+    shards = [worker_slice(stacked, b, n, w) for w in range(n)]
+    sharding = NamedSharding(mesh, P(None, worker.axis))
+    devices = list(mesh.devices.flat)
+    out = {}
+    for key in shards[0]:
+        arrs = [jax.device_put(s[key], d) for s, d in zip(shards, devices)]
+        shp = shards[0][key].shape
+        gshape = (shp[0], shp[1] * n) + shp[2:]
+        out[key] = jax.make_array_from_single_device_arrays(
+            gshape, sharding, arrs)
+    return out
+
+
 class PrefetchFeed:
     """Double-buffered async host->device feed.
 
     A daemon thread walks the superstep schedule, builds each stacked
     (K, B, ...) batch on the host, and ``jax.device_put``s it while the
     main thread's current superstep is still computing; queue depth 2 is
-    classic double buffering (one in flight, one ready).
+    classic double buffering (one in flight, one ready).  ``put`` overrides
+    the host->device transfer (the worker route shards each superstep
+    batch over the worker mesh, ``put_worker_sharded``).
     """
 
-    def __init__(self, pipe, chunks, depth: int = 2):
+    def __init__(self, pipe, chunks, depth: int = 2, put=None):
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._error: BaseException | None = None
+        self._put = put or (lambda p, s, k: jax.device_put(
+            p.superstep_at(s, k)))
         self._thread = threading.Thread(
             target=self._produce, args=(pipe, list(chunks)), daemon=True)
         self._thread.start()
@@ -114,7 +159,7 @@ class PrefetchFeed:
     def _produce(self, pipe, chunks):
         try:
             for start, k in chunks:
-                batch = jax.device_put(pipe.superstep_at(start, k))
+                batch = self._put(pipe, start, k)
                 self._q.put((start, k, batch))
         except BaseException as e:  # surface in the consumer, never hang it
             self._error = e
@@ -142,21 +187,42 @@ def train(arch: str, steps: int, sync_mode: str = "bsp", batch: int = 8,
           ckpt_every: int = 50, die_at_step: int | None = None,
           base_lr: float = 3e-4, compress: bool = False,
           log_every: int = 10, smoke: bool = True, superstep: int = 1,
-          use_kernel: bool = False):
+          use_kernel: bool = False, workers: int | None = None,
+          logical_shards: int = 8):
     if superstep < 1:
         raise ValueError(f"superstep must be >= 1, got {superstep}")
     cfg = C.smoke(arch) if smoke else C.get(arch)
     if use_kernel:
         cfg = dataclasses.replace(cfg, use_kernel=True)
-    sync = SyncConfig(mode=sync_mode, compress=compress)
     optimizer = make_optimizer(cfg, base_lr=base_lr, total_steps=steps)
-    # K=1 is a length-1 scan: every run dispatches through the same scan
-    # body, so mixing K across runs/resumes cannot change the numerics
-    super_fn = jax.jit(make_superstep(cfg, sync, optimizer),
-                       donate_argnums=(0,))
+    put = None
+    if workers is not None:
+        # CHAOS worker-mesh route (DESIGN.md §4): the superstep scan runs
+        # inside shard_map over a 1-D worker mesh; each worker consumes its
+        # contiguous shard of the shared-queue batch, and the sync mode's
+        # collectives thread over the named worker axis.  N=1 runs the SAME
+        # code path, so semantics never depend on how many devices back it.
+        worker = WorkerConfig(workers=workers, logical_shards=logical_shards)
+        worker.validate_batch(batch)
+        mesh = make_host_mesh(workers)
+        sync = SyncConfig(mode=sync_mode, compress=compress,
+                          axis_name=worker.axis)
+        super_fn = make_worker_superstep(cfg, sync, worker, mesh, optimizer)
+        state = init_worker_state(cfg, jax.random.key(0), sync, worker,
+                                  optimizer)
+        put = lambda p, s, k: put_worker_sharded(p, s, k, mesh, worker)
+        print(f"[train] worker mesh: {workers} worker(s) x "
+              f"{worker.shards_per_worker} shard(s), sync={sync_mode}",
+              flush=True)
+    else:
+        sync = SyncConfig(mode=sync_mode, compress=compress)
+        # K=1 is a length-1 scan: every run dispatches through the same scan
+        # body, so mixing K across runs/resumes cannot change the numerics
+        super_fn = jax.jit(make_superstep(cfg, sync, optimizer),
+                           donate_argnums=(0,))
+        state = init_train_state(cfg, jax.random.key(0), sync, optimizer)
     pipe = make_pipeline(cfg, batch, seq)
 
-    state = init_train_state(cfg, jax.random.key(0), sync, optimizer)
     start = 0
     mgr = None
     if ckpt_dir:
@@ -168,7 +234,8 @@ def train(arch: str, steps: int, sync_mode: str = "bsp", batch: int = 8,
     watchdog = StragglerWatchdog(superstep=superstep)
     losses = []
     saved_at = None
-    feed = PrefetchFeed(pipe, superstep_schedule(start, steps, superstep))
+    feed = PrefetchFeed(pipe, superstep_schedule(start, steps, superstep),
+                        put=put)
     for s0, k, dev_batch in feed:
         t0 = time.time()
         state, metrics = super_fn(state, dev_batch)
@@ -209,6 +276,15 @@ def main():
                     help="steps per compiled scan dispatch (K)")
     ap.add_argument("--use-kernel", action="store_true",
                     help="route the CNN hot path through the Pallas kernels")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="CHAOS worker-mesh route: N worker instances over "
+                         "a 1-D device mesh (needs N visible devices; force "
+                         "host devices with XLA_FLAGS=--xla_force_host_"
+                         "platform_device_count=N)")
+    ap.add_argument("--logical-shards", type=int, default=8,
+                    help="fixed micro-shard count of the global batch on "
+                         "the worker route; any --workers dividing it "
+                         "computes bit-identical bsp/chaos updates")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--die-at-step", type=int, default=None)
@@ -219,7 +295,9 @@ def main():
     _, losses = train(args.arch, args.steps, args.sync, args.batch, args.seq,
                       args.ckpt_dir, args.ckpt_every, args.die_at_step,
                       args.lr, args.compress, smoke=not args.full_config,
-                      superstep=args.superstep, use_kernel=args.use_kernel)
+                      superstep=args.superstep, use_kernel=args.use_kernel,
+                      workers=args.workers,
+                      logical_shards=args.logical_shards)
     print(f"[train] done: first-10 mean {np.mean(losses[:10]):.4f} -> "
           f"last-10 mean {np.mean(losses[-10:]):.4f}")
 

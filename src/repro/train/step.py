@@ -15,10 +15,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.chaos import (SyncConfig, init_sync_state, localsgd_average,
-                              transform_grads)
+from repro.core.chaos import (SyncConfig, gathered_shard_mean,
+                              init_sync_state, localsgd_average,
+                              replicate_for_workers, transform_grads)
 from repro.core.schedule import make_lr_fn
-from repro.core.types import ArchConfig
+from repro.core.types import ArchConfig, WorkerConfig
 from repro.models import layers as ML
 from repro.models.api import get_ops
 from repro.optim import adamw, sgd
@@ -179,6 +180,154 @@ def make_superstep(cfg: ArchConfig, sync: SyncConfig, optimizer=None):
         return jax.lax.scan(step, state, batches)
 
     return superstep
+
+
+def make_worker_train_step(cfg: ArchConfig, sync: SyncConfig,
+                           worker: WorkerConfig, optimizer=None):
+    """Per-worker step body for shard_map execution over the worker mesh.
+
+    Runs on each worker's local slice of the global batch (B/N examples,
+    contiguous in global batch order).  The local slice is processed as
+    ``worker.shards_per_worker`` fixed-size micro-shards via ``lax.map``
+    (identical per-shard shapes for every worker count), and the CHAOS sync
+    modes thread their collectives over ``worker.axis``:
+
+      bsp      - gradients all_gather'd and reduced with the fixed-shape
+                 shard mean (worker-count-invariant, bit-exact across N);
+                 workers stay identical.
+      chaos    - staleness-1 delayed exchange: apply the previous step's
+                 globally-reduced gradient (no blocking collective), then
+                 compute fresh gradients whose all_gather gates only the
+                 step output; workers stay identical.
+      localsgd - purely local gradients; parameters pmean-averaged over the
+                 worker axis every ``sync.local_steps`` steps (workers
+                 diverge between boundaries).
+    """
+    ops = get_ops(cfg)
+    optimizer = optimizer or make_optimizer(cfg)
+    if sync.compress:
+        raise NotImplementedError(
+            "gradient compression is not supported on the worker-mesh path")
+    if cfg.micro_batches > 1:
+        raise NotImplementedError(
+            "cfg.micro_batches is not consulted on the worker-mesh path — "
+            "the logical-shard decomposition IS the microbatching here "
+            "(per-shard batch = B / logical_shards); raise "
+            "WorkerConfig.logical_shards to shrink per-shard activation "
+            "memory instead")
+    if sync.mode == "localsgd" and sync.axis_name != worker.axis:
+        sync = dataclasses.replace(sync, axis_name=worker.axis)
+    N, S, axis = worker.workers, worker.logical_shards, worker.axis
+    s_local = worker.shards_per_worker
+
+    def shard_grads(params, batch):
+        """(losses, metrics, grads), each stacked (S/N, ...) over this
+        worker's micro-shards.  Per-shard shapes are independent of N, so
+        per-shard values are bit-identical for every worker count."""
+        def one(b):
+            (l, m), g = jax.value_and_grad(ops.loss, has_aux=True)(params, b)
+            g = jax.tree.map(lambda t: t.astype(jnp.float32), g)
+            return l, m, g
+        shards = jax.tree.map(
+            lambda x: x.reshape((s_local, x.shape[0] // s_local)
+                                + x.shape[1:]), batch)
+        return jax.lax.map(one, shards)
+
+    def global_mean(tree):
+        return gathered_shard_mean(tree, axis, N, S)
+
+    def step(state, batch):
+        params = state["params"]
+
+        if sync.mode == "chaos":
+            # staleness-1: apply last step's (already-reduced) global
+            # gradient now, compute fresh local gradients after — their
+            # all_gather gates only this step's OUTPUT (overlappable)
+            g_apply = state["sync"]["prev_grad"]
+            new_params, new_opt = optimizer.apply(params, g_apply,
+                                                  state["opt"], state["step"])
+            losses, metrics, grads = shard_grads(new_params, batch)
+            new_sync = dict(state["sync"])
+            new_sync["prev_grad"] = jax.tree.map(
+                lambda g, p: g.astype(p.dtype), global_mean(grads),
+                new_params)
+        elif sync.mode == "bsp":
+            losses, metrics, grads = shard_grads(params, batch)
+            new_params, new_opt = optimizer.apply(params, global_mean(grads),
+                                                  state["opt"], state["step"])
+            new_sync = dict(state["sync"])
+        elif sync.mode == "localsgd":
+            losses, metrics, grads = shard_grads(params, batch)
+            g_local = jax.tree.map(lambda x: jnp.sum(x, 0) / s_local, grads)
+            new_params, new_opt = optimizer.apply(params, g_local,
+                                                  state["opt"], state["step"])
+            new_params = localsgd_average(sync, new_params, state["step"])
+            new_sync = dict(state["sync"])
+        else:
+            raise ValueError(sync.mode)
+
+        packed = {**metrics, "loss": losses}
+        if sync.mode == "localsgd":
+            packed = jax.tree.map(lambda x: jnp.mean(x, 0), packed)
+            packed = jax.lax.pmean(packed, axis) if N > 1 else packed
+        else:
+            # same fixed-shape reduction as the gradients: the logged loss
+            # is bit-identical across worker counts too
+            packed = global_mean(packed)
+        new_state = {"params": new_params, "opt": new_opt, "sync": new_sync,
+                     "step": state["step"] + 1}
+        return new_state, packed
+
+    return step
+
+
+def init_worker_state(cfg: ArchConfig, key, sync: SyncConfig,
+                      worker: WorkerConfig, optimizer=None):
+    """TrainState for the worker-mesh route.  bsp/chaos keep every worker
+    identical, so their state is UNSTACKED (mesh-replicated) — byte-for-byte
+    the same checkpoint layout as a single-device run, which is what makes
+    bsp checkpoints worker-count-invariant.  localsgd workers genuinely
+    diverge between K-boundaries, so its state carries a leading (N, ...)
+    worker axis."""
+    state = init_train_state(cfg, key, sync, optimizer)
+    if sync.mode == "localsgd":
+        state = replicate_for_workers(state, worker.workers)
+    return state
+
+
+def make_worker_superstep(cfg: ArchConfig, sync: SyncConfig,
+                          worker: WorkerConfig, mesh, optimizer=None):
+    """Superstep over the worker mesh: the K-step ``lax.scan`` runs INSIDE
+    ``shard_map`` over ``mesh``'s 1-D worker axis, so per-step collectives
+    (gradient exchange / localsgd boundary averages) stay on-device across
+    all K steps and the host still dispatches once per superstep.
+
+    Call with the GLOBAL stacked (K, B, ...) batch; shard_map splits axis 1
+    over workers (worker w's slice == ``pipeline.worker_superstep_at(step,
+    k, N, w)``).  State specs follow ``init_worker_state``'s layout:
+    replicated for bsp/chaos, worker-sharded for localsgd.  Metrics are
+    replicated (K,) vectors.  jit'd with the TrainState donated.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    step = make_worker_train_step(cfg, sync, worker, optimizer)
+    stacked = sync.mode == "localsgd"
+    axis = worker.axis
+
+    def superstep(state, batches):
+        if stacked:
+            state = jax.tree.map(lambda x: x[0], state)
+        state, metrics = jax.lax.scan(step, state, batches)
+        if stacked:
+            state = jax.tree.map(lambda x: x[None], state)
+        return state, metrics
+
+    state_spec = P(axis) if stacked else P()
+    fn = shard_map(superstep, mesh=mesh,
+                   in_specs=(state_spec, P(None, axis)),
+                   out_specs=(state_spec, P()),
+                   check_rep=False)
+    return jax.jit(fn, donate_argnums=(0,))
 
 
 def make_serve_step(cfg: ArchConfig):

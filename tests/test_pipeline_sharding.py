@@ -1,0 +1,77 @@
+"""Property tests for the pipelines' worker sharding (DESIGN.md §4).
+
+The contract backing the worker-mesh route: for ANY (n_workers, K, batch,
+step), concatenating the per-worker shards reconstructs the stacked
+superstep batch exactly — N workers consume the SAME global sample
+sequence as one worker (the paper's shared-queue semantics) — and in queue
+mode one epoch's worth of worker shards covers every sample exactly once
+(no example dropped or duplicated by the sharding)."""
+import numpy as np
+import pytest
+
+from tests._hypothesis_compat import given, settings, st
+
+from repro.data.pipeline import ImagePipeline, TokenPipeline
+
+N_IMAGES = 64
+
+# images tagged by dataset index so sample identity is exactly readable
+IMAGES = (np.arange(N_IMAGES, dtype=np.float32).reshape(N_IMAGES, 1, 1, 1)
+          * np.ones((1, 4, 4, 1), np.float32))
+LABELS = (np.arange(N_IMAGES) % 10).astype(np.int32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.sampled_from([1, 2, 4, 8]), st.integers(1, 5),
+       st.sampled_from([8, 16]), st.integers(0, 57), st.booleans())
+def test_image_worker_shards_concat_to_superstep(n, k, b, step, queue):
+    pipe = ImagePipeline(IMAGES, LABELS, batch=b,
+                         sample_mode="queue" if queue else "iid")
+    full = pipe.superstep_at(step, k)
+    shards = [pipe.worker_superstep_at(step, k, n, w) for w in range(n)]
+    for key in full:
+        np.testing.assert_array_equal(
+            np.concatenate([s[key] for s in shards], axis=1), full[key],
+            err_msg=f"n={n} k={k} b={b} step={step} queue={queue} {key}")
+    # equal shard sizes: no example dropped or duplicated within the batch
+    for s in shards:
+        assert s["images"].shape == (k, b // n, 4, 4, 1)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.sampled_from([1, 2, 4, 8]), st.integers(1, 4),
+       st.sampled_from([8, 16]), st.integers(0, 97))
+def test_token_worker_shards_concat_to_superstep(n, k, b, step):
+    pipe = TokenPipeline(vocab_size=97, batch=b, seq_len=12)
+    full = pipe.superstep_at(step, k)
+    shards = [pipe.worker_superstep_at(step, k, n, w) for w in range(n)]
+    for key in full:
+        np.testing.assert_array_equal(
+            np.concatenate([s[key] for s in shards], axis=1), full[key])
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.sampled_from([1, 2, 4, 8]), st.integers(0, 3))
+def test_queue_mode_epoch_coverage_across_worker_shards(n, epoch):
+    """Across one epoch, the union of every worker's shards is exactly the
+    dataset: the shared queue hands each image to exactly one worker."""
+    b = 8
+    pipe = ImagePipeline(IMAGES, LABELS, batch=b, sample_mode="queue")
+    steps_per_epoch = N_IMAGES // b
+    seen = []
+    for t in range(epoch * steps_per_epoch, (epoch + 1) * steps_per_epoch):
+        for w in range(n):
+            shard = pipe.worker_superstep_at(t, 1, n, w)
+            seen.extend(shard["images"][0, :, 0, 0, 0].astype(int).tolist())
+    assert sorted(seen) == list(range(N_IMAGES)), (
+        f"epoch {epoch} with {n} workers must cover every sample once")
+
+
+def test_worker_shard_validation():
+    pipe = ImagePipeline(IMAGES, LABELS, batch=8, sample_mode="queue")
+    with pytest.raises(ValueError, match="divisible by n_workers"):
+        pipe.worker_superstep_at(0, 1, 3, 0)  # 8 % 3 != 0
+    with pytest.raises(ValueError, match="out of range"):
+        pipe.worker_superstep_at(0, 1, 4, 4)
+    with pytest.raises(ValueError, match="out of range"):
+        pipe.worker_superstep_at(0, 1, 4, -1)
