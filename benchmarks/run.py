@@ -301,13 +301,19 @@ def bench_train(quick=False):
 # measured speedup next to the paper's performance-model prediction.
 # ---------------------------------------------------------------------------
 SCALING_DEVICES = 8
+PAPER_ARCH = {"chaos-small": "small", "chaos-medium": "medium",
+              "chaos-large": "large"}
 
 
-def bench_scaling(quick=False):
+def _run_grid_subprocess(module: str, quick: bool) -> list:
+    """Run a worker-mesh benchmark module in its own process with
+    ``SCALING_DEVICES`` forced host devices (XLA_FLAGS must be set before
+    jax initialises) and return its ``runs`` list.  stdout (the JSON
+    document) is captured; stderr is inherited so per-cell progress lines
+    stream live — a full grid runs for a long time and silent buffering
+    would hide all progress."""
     import re
     import subprocess
-
-    from repro.core import perf_model as pm
 
     env = dict(os.environ)
     flags = re.sub(r"--xla_force_host_platform_device_count=\d+", "",
@@ -316,23 +322,23 @@ def bench_scaling(quick=False):
                         f"{SCALING_DEVICES}").strip()
     env["PYTHONPATH"] = (os.path.join(os.path.dirname(__file__), "..", "src")
                          + os.pathsep + env.get("PYTHONPATH", ""))
-    cmd = [sys.executable, "-m", "benchmarks.scaling"]
+    cmd = [sys.executable, "-m", module]
     if quick:
         cmd.append("--quick")
-    # stdout (the JSON document) is captured; stderr is inherited so the
-    # subprocess's per-cell progress lines stream live — a full grid runs
-    # for a long time and silent buffering would hide all progress
     out = subprocess.run(cmd, stdout=subprocess.PIPE, text=True, env=env,
                          cwd=os.path.join(os.path.dirname(__file__), ".."),
                          timeout=14000)
     if out.returncode != 0:
         raise RuntimeError(
-            f"scaling subprocess failed with rc={out.returncode} "
+            f"{module} subprocess failed with rc={out.returncode} "
             f"(its stderr streamed above)")
-    runs = json.loads(out.stdout)["runs"]
+    return json.loads(out.stdout)["runs"]
 
-    paper_arch = {"chaos-small": "small", "chaos-medium": "medium",
-                  "chaos-large": "large"}
+
+def bench_scaling(quick=False):
+    from repro.core import perf_model as pm
+
+    runs = _run_grid_subprocess("benchmarks.scaling", quick)
     base = {(r["net"], r["mode"], r["use_kernel"]): r["steps_per_s"]
             for r in runs if r["workers"] == 1}
     for r in runs:
@@ -342,7 +348,7 @@ def bench_scaling(quick=False):
         # away an hours-long measurement
         r["speedup_vs_1"] = r["steps_per_s"] / b if b else float("nan")
         # paper performance-model cross-check: N workers ~ N Phi threads
-        r["model_speedup"] = pm.predict_speedup(paper_arch[r["net"]],
+        r["model_speedup"] = pm.predict_speedup(PAPER_ARCH[r["net"]],
                                                 r["workers"])
         kind = "kernel" if r["use_kernel"] else "xla"
         row(f"scaling/{r['net']}/{r['mode']}/{kind}/N{r['workers']}",
@@ -355,6 +361,45 @@ def bench_scaling(quick=False):
             "note": "forced host devices share one CPU; speedup_vs_1 "
                     "validates the worker path + overhead trend, "
                     "model_speedup is the paper's Listing-2 prediction "
+                    "for the same worker count"}
+
+
+# ---------------------------------------------------------------------------
+# Result 1-2 / Tables 4-6 analogue: staleness-τ CHAOS convergence study.
+# Runs the worker-mesh chaos(τ) path (τ=0 ≡ bsp by construction) for the
+# Table-2 nets × τ × worker counts, recording steps/sec AND final error so
+# the paper's "asynchrony does not significantly degrade accuracy" claim is
+# measured, with the τ=0 cell as the synchronous baseline and the Listing-2
+# model prediction per worker count.
+# ---------------------------------------------------------------------------
+def bench_staleness(quick=False):
+    from repro.core import perf_model as pm
+
+    runs = _run_grid_subprocess("benchmarks.staleness", quick)
+    base = {(r["net"], r["workers"]): r for r in runs if r["tau"] == 0}
+    base_n1 = {(r["net"], r["tau"]): r for r in runs if r["workers"] == 1}
+    for r in runs:
+        b = base.get((r["net"], r["workers"]))
+        b1 = base_n1.get((r["net"], r["tau"]))
+        r["speedup_vs_tau0"] = (r["steps_per_s"] / b["steps_per_s"]
+                                if b else float("nan"))
+        r["speedup_vs_n1"] = (r["steps_per_s"] / b1["steps_per_s"]
+                              if b1 else float("nan"))
+        r["error_delta_vs_tau0"] = (r["final_error"] - b["final_error"]
+                                    if b else float("nan"))
+        r["model_speedup"] = pm.predict_speedup(PAPER_ARCH[r["net"]],
+                                                r["workers"])
+        row(f"staleness/{r['net']}/tau{r['tau']}/N{r['workers']}",
+            r["us_per_step"],
+            f"{r['steps_per_s']:.1f}steps_per_s_err={r['final_error']:.4f}"
+            f"_derr={r['error_delta_vs_tau0']:+.4f}"
+            f"_speedup_tau0={r['speedup_vs_tau0']:.2f}x")
+    return {"runs": runs, "forced_devices": SCALING_DEVICES,
+            "note": "tau=0 IS bsp (the chaos strategy resolves to the bsp "
+                    "object at staleness 0); error columns are hardware-"
+                    "independent; forced host devices share one CPU, so "
+                    "steps_per_s validates the harness + overhead trend "
+                    "and model_speedup is the paper's Listing-2 prediction "
                     "for the same worker count"}
 
 
@@ -423,6 +468,7 @@ def main():
         "kernels": bench_kernels,
         "train": bench_train,
         "scaling": bench_scaling,
+        "staleness": bench_staleness,
         "roofline": bench_roofline,
         "serving": bench_serving,
     }

@@ -38,57 +38,76 @@ DATASET = 512
 LOCAL_STEPS = 4    # localsgd boundary
 
 
-def measure(net: str, mode: str, n_workers: int, use_kernel: bool,
-            measured_supersteps: int) -> dict:
-    import repro.configs as C
-    from repro.core.chaos import SyncConfig
+def build_worker_cell(cfg, sync, n_workers: int, opt, *,
+                      dataset: int = DATASET, batch: int = BATCH):
+    """Shared benchmark-cell setup for the worker-mesh studies (this module
+    and ``benchmarks/staleness.py``): worker config + mesh + shared-queue
+    pipeline + compiled worker superstep + initial state."""
     from repro.core.types import WorkerConfig
     from repro.data.mnist import make_dataset
     from repro.data.pipeline import ImagePipeline
     from repro.launch.mesh import make_host_mesh
+    from repro.train.step import init_worker_state, make_worker_superstep
+
+    worker = WorkerConfig(workers=n_workers)
+    worker.validate_batch(batch)
+    mesh = make_host_mesh(n_workers)
+    super_fn = make_worker_superstep(cfg, sync, worker, mesh, opt)
+    imgs, labels = make_dataset(dataset, seed=0)
+    pipe = ImagePipeline(imgs, labels, batch=batch, sample_mode="queue")
+    state = init_worker_state(cfg, jax.random.key(0), sync, worker, opt)
+    return worker, mesh, pipe, super_fn, state, (imgs, labels)
+
+
+def timed_supersteps(super_fn, state, pipe, mesh, worker, n_supersteps: int,
+                     k: int = SUPERSTEP):
+    """Run ``n_supersteps + 1`` supersteps (first = compile, untimed) and
+    return ``(state, last_metrics, us_per_step)``.
+
+    Host batch build + device placement happen OUTSIDE the timed window:
+    the driver's PrefetchFeed overlaps them with the previous superstep's
+    compute, so timing them here would bias speedups against higher worker
+    counts (the serialized host work doesn't shrink with N).  Each timed
+    window is one dispatch + ONE host sync on the (K,) loss vector."""
     from repro.launch.train import put_worker_sharded
-    from repro.train.step import (init_worker_state, make_optimizer,
-                                  make_worker_superstep)
+
+    batches = [put_worker_sharded(pipe, i * k, k, mesh, worker)
+               for i in range(n_supersteps + 1)]
+    measured_steps, elapsed, metrics = 0, 0.0, None
+    for i, batch in enumerate(batches):
+        t0 = time.perf_counter()
+        state, metrics = super_fn(state, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        if i > 0:  # first dispatch = compile, not timed
+            elapsed += dt
+            measured_steps += k
+    return state, metrics, elapsed / measured_steps * 1e6
+
+
+def measure(net: str, mode: str, n_workers: int, use_kernel: bool,
+            measured_supersteps: int) -> dict:
+    import repro.configs as C
+    from repro.core.chaos import SyncConfig
+    from repro.train.step import make_optimizer
 
     cfg = C.get(net)
     if use_kernel:
         cfg = dataclasses.replace(cfg, use_kernel=True)
-    worker = WorkerConfig(workers=n_workers)
-    worker.validate_batch(BATCH)
-    mesh = make_host_mesh(n_workers)
-    sync = SyncConfig(mode, local_steps=LOCAL_STEPS, axis_name=worker.axis)
+    sync = SyncConfig(mode, local_steps=LOCAL_STEPS, axis_name="workers")
     opt = make_optimizer(cfg, total_steps=4096)
-    super_fn = make_worker_superstep(cfg, sync, worker, mesh, opt)
-    imgs, labels = make_dataset(DATASET, seed=0)
-    pipe = ImagePipeline(imgs, labels, batch=BATCH, sample_mode="queue")
-    state = init_worker_state(cfg, jax.random.key(0), sync, worker, opt)
-
-    # Host batch build + device placement happen OUTSIDE the timed window:
-    # the driver's PrefetchFeed overlaps them with the previous superstep's
-    # compute, so timing them here would bias speedup_vs_1 against higher
-    # worker counts (the serialized host work doesn't shrink with N).
-    batches = [put_worker_sharded(pipe, i * SUPERSTEP, SUPERSTEP, mesh,
-                                  worker)
-               for i in range(measured_supersteps + 1)]
-    measured_steps = 0
-    elapsed = 0.0
-    loss = float("nan")
-    for i, batch in enumerate(batches):
-        # timed: one dispatch + ONE host sync on the (K,) loss vector
-        t0 = time.perf_counter()
-        state, metrics = super_fn(state, batch)
-        loss = float(np.asarray(metrics["loss"])[-1])
-        dt = time.perf_counter() - t0
-        if i > 0:  # first dispatch = compile, not timed
-            elapsed += dt
-            measured_steps += SUPERSTEP
-    us_per_step = elapsed / measured_steps * 1e6
+    worker, mesh, pipe, super_fn, state, _ = build_worker_cell(
+        cfg, sync, n_workers, opt)
+    state, metrics, us_per_step = timed_supersteps(
+        super_fn, state, pipe, mesh, worker, measured_supersteps)
+    loss = float(np.asarray(metrics["loss"])[-1])
     return {
         "net": net, "mode": mode, "workers": n_workers,
         "use_kernel": use_kernel, "superstep": SUPERSTEP, "batch": BATCH,
         "logical_shards": worker.logical_shards,
         "us_per_step": us_per_step, "steps_per_s": 1e6 / us_per_step,
-        "measured_steps": measured_steps, "final_loss": loss,
+        "measured_steps": measured_supersteps * SUPERSTEP,
+        "final_loss": loss,
     }
 
 

@@ -86,6 +86,52 @@ def measured_curves(path=None):
         print(f"  {'model':>9s} {model}")
 
 
+def staleness_curves(path=None):
+    """Measured staleness-τ curves (BENCH_staleness.json): final error and
+    steps/sec vs τ per net and worker count — the paper's Result 1-2 claim
+    (accuracy not significantly degraded by asynchronous stale updates)
+    next to the Listing-2 speedup model's prediction for the same worker
+    count.  τ=0 IS bsp (the strategy registry resolves it), so its column
+    is the synchronous baseline."""
+    path = path or os.path.join(ROOT, "BENCH_staleness.json")
+    print("\n== measured staleness-tau curves (BENCH_staleness.json) ==")
+    if not os.path.exists(path):
+        print(f"  {path} not found — generate it with:\n"
+              f"    PYTHONPATH=src python -m benchmarks.run "
+              f"--only staleness")
+        return
+    with open(path) as f:
+        data = json.load(f)
+    runs = data.get("runs", [])
+    if not runs:
+        print("  no runs recorded")
+        return
+    print("  (error columns are hardware-independent; steps/s on forced "
+          "host\n   devices shares one CPU — see the artifact's note)")
+    for net in ("chaos-small", "chaos-medium", "chaos-large"):
+        net_runs = [r for r in runs if r["net"] == net]
+        if not net_runs:
+            continue
+        taus = sorted({r["tau"] for r in net_runs})
+        print(f"\n  {net} (error | steps/s per tau)")
+        print(f"  {'workers':>9s} " + " ".join(
+            f"{'tau=' + str(t):>16s}" for t in taus))
+        for n in sorted({r["workers"] for r in net_runs}):
+            cells = []
+            for t in taus:
+                r = next((r for r in net_runs
+                          if r["tau"] == t and r["workers"] == n), None)
+                cells.append(f"{r['final_error']:.3f}|"
+                             f"{r['steps_per_s']:6.2f}st/s" if r else "-")
+            print(f"  {'N=' + str(n):>9s} " + " ".join(
+                f"{c:>16s}" for c in cells))
+        deltas = [abs(r.get("error_delta_vs_tau0", 0.0)) for r in net_runs
+                  if r["tau"] > 0]
+        if deltas:
+            print(f"  max |error - tau0 error| = {max(deltas):.4f} "
+                  f"(paper claim: not significantly degraded)")
+
+
 def measured_workers():
     """Live demo: 4 CHAOS workers through the production driver's
     worker-mesh route (shard_map superstep; forced host devices)."""
@@ -105,4 +151,5 @@ def measured_workers():
 if __name__ == "__main__":
     model_curves()
     measured_curves()
+    staleness_curves()
     measured_workers()

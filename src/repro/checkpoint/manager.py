@@ -108,19 +108,24 @@ class CheckpointManager:
         arrs = [data[f"a{i}"] for i in range(n)]
         # global shapes must match the template exactly — resharding restore
         # changes device placement, never array shape.  Without this check a
-        # worker-stacked (N, ...) localsgd checkpoint restored under a
-        # different worker count would silently drop workers' diverged state
-        # downstream instead of erroring here.
+        # worker-stacked (N, ...) checkpoint (localsgd / chaos τ>=1)
+        # restored under a different worker count would silently drop
+        # workers' diverged state downstream instead of erroring here.  The
+        # error names the offending leaf's tree path and both shapes so a
+        # mismatch in a 100-leaf TrainState is diagnosable at a glance.
+        keyed_leaves, _ = jax.tree_util.tree_flatten_with_path(like)
         for i, (a, l) in enumerate(zip(arrs, leaves_like)):
             if hasattr(l, "shape") and tuple(a.shape) != tuple(l.shape):
+                leaf_path = jax.tree_util.keystr(keyed_leaves[i][0])
                 raise ValueError(
-                    f"checkpoint leaf {i} has shape {a.shape} but the "
-                    f"restore template expects {l.shape}: the checkpoint "
-                    f"was written under a different state layout (e.g. a "
-                    f"stacked localsgd worker checkpoint resumed with a "
-                    f"different --workers — localsgd checkpoints pin the "
-                    f"worker count; bsp/chaos checkpoints are "
-                    f"worker-count-invariant)")
+                    f"checkpoint leaf {i} at {leaf_path}: checkpoint has "
+                    f"shape {tuple(a.shape)} but the restore template "
+                    f"expects {tuple(l.shape)}: the checkpoint was written "
+                    f"under a different state layout (e.g. a worker-stacked "
+                    f"localsgd / chaos staleness>=1 checkpoint resumed with "
+                    f"a different --workers — stacked checkpoints pin the "
+                    f"worker count; bsp and chaos staleness=0 checkpoints "
+                    f"are worker-count-invariant)")
         # cast back through jnp: numpy lacks cast kernels for bf16 & friends
         arrs = [np.asarray(jax.numpy.asarray(a).astype(l.dtype))
                 if hasattr(l, "dtype") and a.dtype != l.dtype else a

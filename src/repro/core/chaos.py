@@ -6,16 +6,19 @@ Three modes, all usable by any architecture in the zoo:
 ``bsp``     Bulk-synchronous SGD (paper strategy B, per-minibatch): the
             gradient all-reduce sits on the critical path of every step.
 
-``chaos``   Controlled-Hogwild analogue: **staleness-1 delayed exchange**.
-            The step applies the *previous* step's globally-reduced gradient
-            (available immediately — no blocking collective), then computes
-            this step's gradients, whose cross-replica reduction only gates
-            the step *output*, so XLA's latency-hiding scheduler overlaps it
-            with backprop compute, per layer, in arbitrary completion order —
-            the SPMD realisation of "non-instant updates of weight parameters
-            without significant delay" + "implicit synchronization in
-            arbitrary order".  Update rule (Zinkevich-style delayed SGD):
-                w_{t+1} = w_t - lr * mean_i g_i(w_{t-1})
+``chaos``   Controlled-Hogwild: **staleness-τ exchange** (``SyncConfig.
+            staleness``; semantics in ``train/sync.py``, DESIGN.md §5).
+            On the worker-mesh path each worker applies its OWN gradient
+            contribution instantly every step and folds peers' contributions
+            in τ steps late (a τ-deep ring buffer) — the paper's "non-instant
+            updates of weight parameters without significant delay" +
+            "implicit synchronization in arbitrary order".  On the pjit path
+            (one logical instance; peers are the implicit cross-replica
+            reduction) the whole exchange is delayed τ steps,
+                w_{t+1} = w_t - lr * mean_i g_i(w_{t-τ}-trajectory)
+            so the reduction gates only the step *output* and XLA's
+            latency-hiding scheduler overlaps it with backprop compute.
+            τ=0 degenerates exactly to ``bsp`` (same strategy object).
 
 ``localsgd``  Paper strategy-C flavour: per-replica instances train on their
             own weights for K steps, then parameters are averaged.  This
@@ -45,7 +48,7 @@ import jax.numpy as jnp
 
 @dataclasses.dataclass(frozen=True)
 class SyncConfig:
-    mode: str = "bsp"            # bsp | chaos | localsgd
+    mode: str = "bsp"            # any name in train/sync.py's registry
     local_steps: int = 8         # K for localsgd
     compress: bool = False       # bf16 gradient exchange w/ error feedback
     #: named mesh axis for the pjit-path localsgd parameter average; None
@@ -53,6 +56,22 @@ class SyncConfig:
     #: K-step counter carry and the where-select still execute, so the
     #: superstep scan carry is exercised identically on 1 or N replicas.
     axis_name: Optional[str] = None
+    #: chaos staleness τ, in steps: peers' gradient contributions fold into
+    #: the update up to τ steps late (a τ-deep ring buffer in the scan
+    #: carry).  τ=0 degenerates EXACTLY to bsp — the registry resolves
+    #: chaos(τ=0) to the bsp strategy object, so bit-exactness is by
+    #: construction (train/sync.py).  τ=1 on the pjit path reproduces the
+    #: historical staleness-1 delayed exchange unchanged.
+    staleness: int = 1
+    #: per-layer non-instant updates during backprop (the paper's §3 rule:
+    #: apply dW_l as soon as layer l's gradient is produced, in reverse
+    #: layer order inside the step) — CNN family + stateless SGD only.
+    layerwise: bool = False
+
+    def __post_init__(self):
+        if self.staleness < 0:
+            raise ValueError(
+                f"staleness must be >= 0, got {self.staleness}")
 
 
 def zeros_like_f32(tree):
@@ -60,21 +79,13 @@ def zeros_like_f32(tree):
 
 
 # ---------------------------------------------------------------------------
-# pjit path (production): the train-step builder calls `transform_grads`
-# around the optimizer.  State carried in TrainState.sync (prev grads /
-# compression residuals).
+# pjit path (production): synchronization behaviour lives in the pluggable
+# strategy registry (train/sync.py); this wrapper is kept as the stable
+# public name for sync-state construction.
 # ---------------------------------------------------------------------------
 def init_sync_state(sync: SyncConfig, params):
-    st = {}
-    if sync.mode == "chaos":
-        # staleness buffer in param dtype: for a 227B-param model an f32
-        # copy costs +5.2 GB/dev (measured, EXPERIMENTS.md §Perf H7) and
-        # gradients are produced in param dtype anyway
-        st["prev_grad"] = jax.tree.map(
-            lambda p: jnp.zeros(p.shape, p.dtype), params)
-    if sync.compress:
-        st["residual"] = zeros_like_f32(params)
-    return st
+    from repro.train.sync import get_strategy  # local: avoid import cycle
+    return get_strategy(sync).init_state(params)
 
 
 def localsgd_average(sync: SyncConfig, params, step):
@@ -108,21 +119,6 @@ def compress_grads(grads, residual):
     q = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
     r = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
     return q, r
-
-
-def transform_grads(sync: SyncConfig, grads, sync_state):
-    """Returns (grads_to_apply, new_sync_state)."""
-    new_state = dict(sync_state)
-    if sync.compress:
-        grads, new_state["residual"] = compress_grads(
-            grads, sync_state["residual"])
-        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
-    if sync.mode == "chaos":
-        apply_g = sync_state["prev_grad"]
-        new_state["prev_grad"] = jax.tree.map(
-            lambda g: g.astype(jnp.float32), grads)
-        return apply_g, new_state
-    return grads, new_state
 
 
 # ---------------------------------------------------------------------------

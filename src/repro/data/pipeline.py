@@ -95,10 +95,11 @@ class ImagePipeline:
     #:           queue[t*B:(t+1)*B] — workers that finish early just take
     #:           the next image, no static split (straggler-friendly).
     sample_mode: str = "iid"
-    # last (epoch, permutation) — queue_batch_at is a pure function of the
-    # step, so this is purely a recomputation cache (superstep_at would
-    # otherwise re-permute the whole dataset K times per chunk)
-    _epoch_cache: tuple | None = dataclasses.field(
+    # small LRU of (epoch, permutation) pairs — queue_batch_at is a pure
+    # function of the step, so this is purely a recomputation cache
+    # (superstep_at would otherwise re-permute the whole dataset K times per
+    # chunk); two entries because a batch can straddle an epoch boundary
+    _epoch_cache: list | None = dataclasses.field(
         default=None, repr=False, compare=False)
 
     def batch_at(self, step: int):
@@ -109,19 +110,37 @@ class ImagePipeline:
         idx = rng.integers(0, len(self.images), size=self.batch)
         return {"images": self.images[idx], "labels": self.labels[idx]}
 
+    def _queue_perm(self, epoch: int) -> np.ndarray:
+        for e, perm in self._epoch_cache or ():
+            if e == epoch:
+                return perm
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, epoch]))
+        perm = rng.permutation(len(self.images))
+        self._epoch_cache = ([(epoch, perm)]
+                             + list(self._epoch_cache or ()))[:2]
+        return perm
+
     def queue_batch_at(self, step: int):
-        """Paper worker semantics as a pure function of `step`: epoch e's
-        permutation is the shared queue; lane w of the batch takes
-        queue[w + t*B] at in-epoch step t (its every-B-th sample)."""
-        steps_per_epoch = max(len(self.images) // self.batch, 1)
-        epoch, t = divmod(step, steps_per_epoch)
-        if self._epoch_cache is None or self._epoch_cache[0] != epoch:
-            rng = np.random.default_rng(
-                np.random.SeedSequence([self.seed, epoch]))
-            self._epoch_cache = (epoch, rng.permutation(len(self.images)))
-        order = self._epoch_cache[1]
-        lo = (t * self.batch) % len(self.images)
-        idx = np.resize(order, lo + self.batch)[lo:lo + self.batch]
+        """Paper worker semantics as a pure function of `step`: the shared
+        queue is the infinite concatenation of per-epoch permutations, and
+        the step-t batch is its contiguous chunk [t*B, (t+1)*B).  When B
+        does not divide the dataset length a batch simply straddles the
+        epoch boundary — the workers take the next epoch's first images, so
+        EVERY epoch still covers every sample exactly once (no tail dropped,
+        no wraparound duplicates; tests/test_pipeline_sharding.py).  When B
+        divides the length this is bit-identical to the per-epoch slicing
+        it replaces."""
+        n = len(self.images)
+        epoch, off = divmod(step * self.batch, n)
+        chunks, need = [], self.batch
+        while need > 0:
+            perm = self._queue_perm(epoch)
+            take = min(need, n - off)
+            chunks.append(perm[off:off + take])
+            need -= take
+            epoch, off = epoch + 1, 0
+        idx = np.concatenate(chunks) if len(chunks) > 1 else chunks[0]
         return {"images": self.images[idx], "labels": self.labels[idx]}
 
     def superstep_at(self, step: int, k: int):

@@ -69,14 +69,36 @@ def _load_disk() -> dict:
 
 
 def _save_disk(entries: dict) -> None:
+    """Concurrent-writer-safe persist: re-merge against the file, write to a
+    tmp file UNIQUE to this process (mkstemp), then atomically rename.  Two
+    processes tuning the same net may each win some last-writer races on
+    individual keys, but the cache file itself can never be torn/corrupt —
+    a shared ``path + ".tmp"`` name would let two writers interleave bytes
+    in one tmp file before the rename (tests/test_autotune_cache.py)."""
+    import tempfile
+
     path = cache_path()
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     merged = _load_disk()
     merged.update(entries)
-    tmp = path + ".tmp"
-    with open(tmp, "w") as f:
-        json.dump(merged, f, indent=1, sort_keys=True)
-    os.replace(tmp, path)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               prefix=".autotune.", suffix=".tmp")
+    try:
+        # mkstemp creates 0600 scratch files; restore umask-based perms so
+        # a shared cache path stays readable to other users/CI stages like
+        # the plain open() it replaced
+        umask = os.umask(0)
+        os.umask(umask)
+        os.fchmod(fd, 0o666 & ~umask)
+        with os.fdopen(fd, "w") as f:
+            json.dump(merged, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
 
 
 def key_for(op: str, shapes, dtype, *, interpret: bool,

@@ -18,8 +18,10 @@ Features (framework-scale runtime, DESIGN.md §3):
     token archs from ``TokenPipeline``;
   - checkpoint/restart: atomic keep-N checkpoints, auto-resume from latest,
     deterministic data pipeline keyed by step (resume == replay, any K);
-  - CHAOS sync modes (bsp | chaos | localsgd) for the gradient exchange —
-    all three thread their sync state through the scan carry;
+  - pluggable sync strategies (train/sync.py registry: bsp | chaos |
+    localsgd; --staleness picks chaos' τ, --layerwise the paper's
+    per-layer update rule) — every strategy threads its sync state
+    through the scan carry;
   - WORKER MESH (--workers N, DESIGN.md §4): the superstep scan runs inside
     shard_map over a 1-D worker mesh (the paper's Phi threads); each worker
     consumes its contiguous shard of the shared-queue batch and the sync
@@ -57,6 +59,7 @@ from repro.launch.mesh import make_host_mesh
 from repro.train.step import (init_train_state, init_worker_state,
                               make_optimizer, make_superstep,
                               make_worker_superstep)
+from repro.train.sync import get_strategy, sync_modes
 
 #: synthetic-MNIST pool size for CNN runs (offline container, DESIGN.md §6)
 CNN_DATASET_SIZE = 4096
@@ -188,7 +191,8 @@ def train(arch: str, steps: int, sync_mode: str = "bsp", batch: int = 8,
           base_lr: float = 3e-4, compress: bool = False,
           log_every: int = 10, smoke: bool = True, superstep: int = 1,
           use_kernel: bool = False, workers: int | None = None,
-          logical_shards: int = 8):
+          logical_shards: int = 8, staleness: int = 1,
+          layerwise: bool = False):
     if superstep < 1:
         raise ValueError(f"superstep must be >= 1, got {superstep}")
     cfg = C.smoke(arch) if smoke else C.get(arch)
@@ -199,23 +203,25 @@ def train(arch: str, steps: int, sync_mode: str = "bsp", batch: int = 8,
     if workers is not None:
         # CHAOS worker-mesh route (DESIGN.md §4): the superstep scan runs
         # inside shard_map over a 1-D worker mesh; each worker consumes its
-        # contiguous shard of the shared-queue batch, and the sync mode's
+        # contiguous shard of the shared-queue batch, and the strategy's
         # collectives thread over the named worker axis.  N=1 runs the SAME
         # code path, so semantics never depend on how many devices back it.
         worker = WorkerConfig(workers=workers, logical_shards=logical_shards)
         worker.validate_batch(batch)
         mesh = make_host_mesh(workers)
         sync = SyncConfig(mode=sync_mode, compress=compress,
-                          axis_name=worker.axis)
+                          axis_name=worker.axis, staleness=staleness,
+                          layerwise=layerwise)
         super_fn = make_worker_superstep(cfg, sync, worker, mesh, optimizer)
         state = init_worker_state(cfg, jax.random.key(0), sync, worker,
                                   optimizer)
         put = lambda p, s, k: put_worker_sharded(p, s, k, mesh, worker)
         print(f"[train] worker mesh: {workers} worker(s) x "
-              f"{worker.shards_per_worker} shard(s), sync={sync_mode}",
-              flush=True)
+              f"{worker.shards_per_worker} shard(s), sync={sync_mode} "
+              f"({get_strategy(sync).checkpoint_layout()})", flush=True)
     else:
-        sync = SyncConfig(mode=sync_mode, compress=compress)
+        sync = SyncConfig(mode=sync_mode, compress=compress,
+                          staleness=staleness, layerwise=layerwise)
         # K=1 is a length-1 scan: every run dispatches through the same scan
         # body, so mixing K across runs/resumes cannot change the numerics
         super_fn = jax.jit(make_superstep(cfg, sync, optimizer),
@@ -268,8 +274,14 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--steps", type=int, default=100)
-    ap.add_argument("--sync", default="bsp",
-                    choices=["bsp", "chaos", "localsgd"])
+    ap.add_argument("--sync", default="bsp", choices=sync_modes(),
+                    help="synchronization strategy (train/sync.py registry)")
+    ap.add_argument("--staleness", type=int, default=1,
+                    help="chaos staleness tau in steps; 0 degenerates "
+                         "exactly to bsp (bit-exact, same checkpoints)")
+    ap.add_argument("--layerwise", action="store_true",
+                    help="per-layer non-instant updates during backprop "
+                         "(paper update rule; CNN + plain SGD only)")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--superstep", type=int, default=1,
@@ -297,7 +309,8 @@ def main():
                       args.lr, args.compress, smoke=not args.full_config,
                       superstep=args.superstep, use_kernel=args.use_kernel,
                       workers=args.workers,
-                      logical_shards=args.logical_shards)
+                      logical_shards=args.logical_shards,
+                      staleness=args.staleness, layerwise=args.layerwise)
     print(f"[train] done: first-10 mean {np.mean(losses[:10]):.4f} -> "
           f"last-10 mean {np.mean(losses[-10:]):.4f}")
 

@@ -118,6 +118,105 @@ def forward(params, images, cfg: ArchConfig, use_kernel: bool | None = None):
     return x
 
 
+def _layer_fns(cfg: ArchConfig, uk: bool):
+    """One closure per Table-2 layer, in forward order: ``(name, fn)`` where
+    ``fn(p, x)`` (params-less layers: ``fn(x)``, name None) runs that layer
+    through the XLA or Pallas-kernel path.  Shared by the layerwise walk so
+    both paths stay byte-compatible with ``forward``."""
+    if uk:
+        from repro.kernels import ops as kops
+    shapes = _trace_shapes(cfg)
+    out = []
+    for i, (kind, k, _, cin, cout) in enumerate(shapes):
+        if kind == "conv":
+            if uk:
+                fn = lambda p, x: kops.conv2d_bias_tanh(x, p["w"], p["b"])
+            else:
+                fn = lambda p, x: jnp.tanh(jax.lax.conv_general_dilated(
+                    x, p["w"], (1, 1), "VALID",
+                    dimension_numbers=("NHWC", "HWIO", "NHWC")) + p["b"])
+            out.append((f"conv{i}", fn))
+        elif kind == "pool":
+            if k > 1:
+                if uk:
+                    fn = lambda x, k=k: kops.maxpool2d(x, k)
+                else:
+                    fn = lambda x, k=k: jax.lax.reduce_window(
+                        x, -jnp.inf, jax.lax.max, (1, k, k, 1),
+                        (1, k, k, 1), "VALID")
+                out.append((None, fn))
+        else:
+            last = i == len(shapes) - 1
+
+            def fn(p, x, last=last):
+                if x.ndim > 2:
+                    x = x.reshape(x.shape[0], -1)
+                if uk:
+                    return (kops.fc_bias(x, p["w"], p["b"]) if last
+                            else kops.fc_bias_tanh(x, p["w"], p["b"]))
+                x = x @ p["w"] + p["b"]
+                return x if last else jnp.tanh(x)
+            out.append((f"fc{i}", fn))
+    return out
+
+
+def loss_and_layerwise_update(params, batch, cfg: ArchConfig, apply_layer,
+                              use_kernel: bool | None = None):
+    """The paper's §3 update rule: non-instant per-layer weight updates
+    DURING back-propagation.
+
+    Forward runs at the incoming ``params`` recording a per-layer VJP tape;
+    the backward walk then visits layers in reverse order and, the moment
+    layer l's gradient ``dW_l`` is produced, calls
+    ``apply_layer(name, params_l, dW_l) -> new_params_l`` — so in the
+    compiled graph each layer's update is chained to that layer's gradient
+    production, not to a whole-tree barrier ("without significant delay").
+    The same walk drives the XLA and the fused Pallas-kernel paths (each
+    layer closure carries its own custom-VJP kernels).
+
+    Returns ``(loss, metrics, new_params, grads)`` with ``grads`` the fresh
+    float32 per-layer gradients (for the sync strategy's exchange).
+    """
+    uk = _use_kernel(cfg, use_kernel)
+    x = batch["images"]
+    labels = batch["labels"]
+    tape = []
+    for name, fn in _layer_fns(cfg, uk):
+        if name is None:
+            x, vjp = jax.vjp(fn, x)
+        else:
+            x, vjp = jax.vjp(fn, params[name], x)
+        tape.append((name, vjp))
+
+    def loss_part(logits):
+        logits = logits.astype(jnp.float32)
+        if uk:
+            from repro.kernels import ops as kops
+            return jnp.mean(kops.softmax_xent(logits, labels))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        return jnp.mean(lse - ll)
+
+    loss, vjp_loss = jax.vjp(loss_part, x)
+    logits32 = x.astype(jnp.float32)
+    err = jnp.mean((jnp.argmax(logits32, -1) != labels).astype(jnp.float32))
+    metrics = {"ce": loss, "error_rate": err,
+               "aux": jnp.zeros((), jnp.float32)}
+
+    (dy,) = vjp_loss(jnp.ones((), loss.dtype))
+    new_params = dict(params)
+    grads = {}
+    for name, vjp in reversed(tape):
+        if name is None:
+            (dy,) = vjp(dy)
+            continue
+        dp, dy = vjp(dy)
+        dp = jax.tree.map(lambda t: t.astype(jnp.float32), dp)
+        grads[name] = dp
+        new_params[name] = apply_layer(name, params[name], dp)
+    return loss, metrics, new_params, grads
+
+
 def loss_fn(params, batch, cfg: ArchConfig, use_kernel: bool | None = None):
     uk = _use_kernel(cfg, use_kernel)
     logits = forward(params, batch["images"], cfg, use_kernel=uk)

@@ -1,10 +1,16 @@
-"""Train/serve step builders: the glue between models, CHAOS sync,
-optimizers, and sharding.
+"""Train/serve step builders: the glue between models, the SyncStrategy
+engine, optimizers, and sharding.
 
 ``make_train_step(cfg, sync)``  -> (step_fn, TrainState helpers)
 ``make_superstep(cfg, sync)``   -> K steps per dispatch via lax.scan over a
                                    stacked (K, B, ...) batch (DESIGN.md §3)
 ``make_serve_step(cfg)``        -> decode step over a KV/state cache
+
+Synchronization behaviour (bsp / chaos(τ) / localsgd / anything registered
+later) is fully delegated to ``train/sync.py``: this module builds the
+execution-path ``StepContext`` (how gradients are produced and reduced) and
+the strategy supplies the step body — there are no per-mode branches here
+(DESIGN.md §5).
 """
 from __future__ import annotations
 
@@ -15,14 +21,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.chaos import (SyncConfig, gathered_shard_mean,
-                              init_sync_state, localsgd_average,
-                              replicate_for_workers, transform_grads)
+from repro.core.chaos import SyncConfig, gathered_shard_mean
 from repro.core.schedule import make_lr_fn
 from repro.core.types import ArchConfig, WorkerConfig
 from repro.models import layers as ML
 from repro.models.api import get_ops
 from repro.optim import adamw, sgd
+from repro.train.sync import StepContext, get_strategy
 
 
 def make_optimizer(cfg: ArchConfig, base_lr: float = 3e-4,
@@ -40,14 +45,15 @@ def init_train_state(cfg: ArchConfig, key, sync: SyncConfig,
                      optimizer=None, abstract: bool = False):
     ops = get_ops(cfg)
     optimizer = optimizer or make_optimizer(cfg)
+    strat = get_strategy(sync)
     if abstract:
         params = jax.eval_shape(ops.init, key)
     else:
         params = ops.init(key)
     opt_state = (jax.eval_shape(optimizer.init, params) if abstract
                  else optimizer.init(params))
-    sync_state = (jax.eval_shape(lambda p: init_sync_state(sync, p), params)
-                  if abstract else init_sync_state(sync, params))
+    sync_state = (jax.eval_shape(strat.init_state, params)
+                  if abstract else strat.init_state(params))
     return {"params": params, "opt": opt_state, "sync": sync_state,
             "step": (jax.ShapeDtypeStruct((), jnp.int32) if abstract
                      else jnp.zeros((), jnp.int32))}
@@ -58,38 +64,30 @@ def state_specs(cfg: ArchConfig, sync: SyncConfig, optimizer=None):
     ops = get_ops(cfg)
     pspecs = ops.param_specs()
     optimizer = optimizer or make_optimizer(cfg)
+    strat = get_strategy(sync)
 
-    # optimizer / sync states mirror param sharding (one params-shaped tree
-    # per top-level key: adamw {m, v}, sgd-momentum {mu}, chaos {prev_grad})
+    # optimizer state mirrors param sharding (one params-shaped tree per
+    # top-level key: adamw {m, v}, sgd-momentum {mu}); the sync strategy
+    # owns its own state layout (chaos' ring is τ separate params-shaped
+    # slot trees, each sharded exactly like params)
     abstract = jax.eval_shape(ops.init, jax.random.key(0))
     opt_abs = jax.eval_shape(optimizer.init, abstract)
-    sync_abs = jax.eval_shape(lambda p: init_sync_state(sync, p), abstract)
     opt_specs = {k: pspecs for k in opt_abs} if isinstance(opt_abs, dict) else {}
-    # params-shaped sync buffers mirror param sharding; scalar carries
-    # (localsgd's local_t counter) are replicated
-    sync_specs = {k: (pspecs if isinstance(v, dict) else P())
-                  for k, v in sync_abs.items()}
-    return {"params": pspecs, "opt": opt_specs, "sync": sync_specs,
-            "step": P()}
+    return {"params": pspecs, "opt": opt_specs,
+            "sync": strat.state_specs(pspecs), "step": P()}
 
 
-def make_train_step(cfg: ArchConfig, sync: SyncConfig, optimizer=None):
-    """Returns step(state, batch) -> (new_state, metrics).
-
-    CHAOS mode: apply the previous step's (already-reduced) gradients first,
-    then compute this step's gradients — their cross-replica reduction gates
-    only the step output, so it overlaps with compute (DESIGN.md §2).
-    """
-    ops = get_ops(cfg)
-    optimizer = optimizer or make_optimizer(cfg)
-
+def _make_grad_fn(cfg: ArchConfig, ops):
+    """(params, batch) -> (loss, metrics, grads), with optional
+    microbatching (gradient accumulation): the global batch is split into
+    cfg.micro_batches slices processed sequentially — activation memory
+    scales 1/n_micro."""
     def grad_fn(params, batch):
-        """Gradients, with optional microbatching (gradient accumulation):
-        the global batch is split into cfg.micro_batches slices processed
-        sequentially — activation memory scales 1/n_micro."""
         n_micro = max(cfg.micro_batches, 1)
         if n_micro == 1:
-            return jax.value_and_grad(ops.loss, has_aux=True)(params, batch)
+            (l, m), g = jax.value_and_grad(ops.loss, has_aux=True)(params,
+                                                                   batch)
+            return l, m, g
 
         def split(x):
             return x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
@@ -118,43 +116,70 @@ def make_train_step(cfg: ArchConfig, sync: SyncConfig, optimizer=None):
             (l, m, g), _ = jax.lax.scan(
                 body, (l0, m0, g0), jax.tree.map(lambda x: x[1:], mb))
         inv = 1.0 / n_micro
-        return ((l * inv, jax.tree.map(lambda t: t * inv, m)),
+        return (l * inv, jax.tree.map(lambda t: t * inv, m),
                 jax.tree.map(lambda t: t * inv, g))
 
+    return grad_fn
+
+
+def make_train_step(cfg: ArchConfig, sync: SyncConfig, optimizer=None):
+    """Returns step(state, batch) -> (new_state, metrics).
+
+    The step body comes from the registered SyncStrategy; this builder only
+    supplies the single-instance StepContext (implicit-SPMD reductions are
+    identities).  ``sync.layerwise`` routes through the per-layer
+    non-instant-update path instead (CNN + stateless SGD, DESIGN.md §5).
+    """
+    ops = get_ops(cfg)
+    optimizer = optimizer or make_optimizer(cfg)
+    strat = get_strategy(sync)
+    if sync.layerwise:
+        return _make_layerwise_step(cfg, sync, strat, ops, optimizer)
+    ctx = StepContext(optimizer=optimizer, grad_fn=_make_grad_fn(cfg, ops))
+
     def step(state, batch):
-        params = state["params"]
+        return strat.step(ctx, state, batch)
 
-        if sync.mode == "chaos":
-            # 1) update with the stale (previous-step) global gradient —
-            #    available immediately, no blocking collective
-            g_apply = state["sync"]["prev_grad"]
-            new_params, new_opt = optimizer.apply(params, g_apply,
-                                                  state["opt"], state["step"])
-            # 2) fresh gradients at the new params -> next step's update;
-            #    their reduction gates only the step OUTPUT (overlappable)
-            (loss, metrics), grads = grad_fn(new_params, batch)
-            new_sync = dict(state["sync"])
-            if sync.compress:
-                from repro.core.chaos import compress_grads
-                grads, new_sync["residual"] = compress_grads(
-                    grads, state["sync"]["residual"])
-            new_sync["prev_grad"] = jax.tree.map(
-                lambda g, p: g.astype(p.dtype), grads, new_params)
-        else:
-            (loss, metrics), grads = grad_fn(params, batch)
-            g_apply, new_sync = transform_grads(sync, grads, state["sync"])
-            new_params, new_opt = optimizer.apply(params, g_apply,
-                                                  state["opt"], state["step"])
-            if sync.mode == "localsgd":
-                # strategy-C boundary: average params every local_steps,
-                # keyed off the scan-carried step counter
-                new_params = localsgd_average(sync, new_params,
-                                              state["step"])
+    return step
 
-        new_state = {"params": new_params, "opt": new_opt, "sync": new_sync,
-                     "step": state["step"] + 1}
-        metrics = {**metrics, "loss": loss}
-        return new_state, metrics
+
+def _make_layerwise_step(cfg: ArchConfig, sync: SyncConfig, strat, ops,
+                         optimizer):
+    """Per-layer non-instant updates during backprop (paper §3: dW_l is
+    applied the moment layer l's gradient is produced, in reverse layer
+    order) — works through both the XLA and Pallas-kernel CNN paths, and
+    composes with the superstep scan unchanged."""
+    if cfg.family != "cnn":
+        raise NotImplementedError(
+            "sync.layerwise implements the paper's per-layer CNN update "
+            f"rule; family={cfg.family!r} has no layerwise backward walk")
+    if cfg.micro_batches > 1:
+        raise NotImplementedError(
+            "sync.layerwise does not compose with micro-batch accumulation")
+    if sync.compress:
+        raise NotImplementedError(
+            "sync.layerwise does not support gradient compression: the "
+            "per-layer walk applies raw layer gradients, so the "
+            "error-feedback residual would silently never update")
+    abstract = jax.eval_shape(ops.init, jax.random.key(0))
+    if jax.eval_shape(optimizer.init, abstract) != {}:
+        raise NotImplementedError(
+            "sync.layerwise applies each layer's update in isolation, which "
+            "requires a stateless optimizer (plain SGD, the paper's); got "
+            "one with per-parameter state")
+    from repro.models.cnn import loss_and_layerwise_update
+    ctx = StepContext(optimizer=optimizer)
+
+    def step(state, batch):
+        apply_layer, finish = strat.layer_apply(ctx, state["sync"],
+                                                state["step"])
+        loss, metrics, new_params, grads = loss_and_layerwise_update(
+            state["params"], batch, cfg, apply_layer)
+        new_sync = finish(grads)
+        new_params = strat.boundary(ctx, new_params, state["step"])
+        new_state = {"params": new_params, "opt": state["opt"],
+                     "sync": new_sync, "step": state["step"] + 1}
+        return new_state, {**metrics, "loss": loss}
 
     return step
 
@@ -165,11 +190,12 @@ def make_superstep(cfg: ArchConfig, sync: SyncConfig, optimizer=None):
     ``batches`` is a stacked (K, B, ...) pytree (``pipeline.superstep_at``);
     the K constituent steps run inside ONE compiled ``jax.lax.scan``, so the
     host dispatches (and syncs on metrics) once per K steps instead of once
-    per step.  The whole TrainState — params, optimizer moments, CHAOS sync
-    buffers (prev_grad / residual), and the step counter that drives the
-    LR schedule and localsgd boundary — is the scan carry, so all sync modes
-    compose unchanged and the result is bit-identical to K individual
-    dispatches (tests/test_superstep.py).  Metrics come back stacked (K,).
+    per step.  The whole TrainState — params, optimizer moments, the sync
+    strategy's buffers (chaos ring / compression residual), and the step
+    counter that drives the LR schedule and localsgd boundary — is the scan
+    carry, so every registered strategy composes unchanged and the result
+    is bit-identical to K individual dispatches (tests/test_superstep.py).
+    Metrics come back stacked (K,).
 
     jit with ``donate_argnums=(0,)``: the TrainState is donated so a
     superstep is update-in-place at the HBM level.
@@ -189,25 +215,27 @@ def make_worker_train_step(cfg: ArchConfig, sync: SyncConfig,
     Runs on each worker's local slice of the global batch (B/N examples,
     contiguous in global batch order).  The local slice is processed as
     ``worker.shards_per_worker`` fixed-size micro-shards via ``lax.map``
-    (identical per-shard shapes for every worker count), and the CHAOS sync
-    modes thread their collectives over ``worker.axis``:
+    (identical per-shard shapes for every worker count), and the strategy's
+    collectives thread over ``worker.axis`` through the StepContext
+    reducers:
 
-      bsp      - gradients all_gather'd and reduced with the fixed-shape
-                 shard mean (worker-count-invariant, bit-exact across N);
-                 workers stay identical.
-      chaos    - staleness-1 delayed exchange: apply the previous step's
-                 globally-reduced gradient (no blocking collective), then
-                 compute fresh gradients whose all_gather gates only the
-                 step output; workers stay identical.
-      localsgd - purely local gradients; parameters pmean-averaged over the
-                 worker axis every ``sync.local_steps`` steps (workers
-                 diverge between boundaries).
+      combine     - the worker-count-invariant gathered shard mean
+                    (all_gather + ONE fixed-shape sum over logical_shards)
+      local_mean  - mean over this worker's own micro-shards
+      local_frac  - this worker's additive term of the global mean
+                    (local shard sum / logical_shards)
     """
     ops = get_ops(cfg)
     optimizer = optimizer or make_optimizer(cfg)
     if sync.compress:
         raise NotImplementedError(
             "gradient compression is not supported on the worker-mesh path")
+    if sync.layerwise:
+        raise NotImplementedError(
+            "sync.layerwise is not supported on the worker-mesh path yet: "
+            "the fixed-shape gathered reduction runs on the stacked "
+            "micro-shard gradients, and applying it per layer would need "
+            "per-layer collectives (ROADMAP open item)")
     if cfg.micro_batches > 1:
         raise NotImplementedError(
             "cfg.micro_batches is not consulted on the worker-mesh path — "
@@ -215,8 +243,9 @@ def make_worker_train_step(cfg: ArchConfig, sync: SyncConfig,
             "(per-shard batch = B / logical_shards); raise "
             "WorkerConfig.logical_shards to shrink per-shard activation "
             "memory instead")
-    if sync.mode == "localsgd" and sync.axis_name != worker.axis:
+    if sync.axis_name != worker.axis:
         sync = dataclasses.replace(sync, axis_name=worker.axis)
+    strat = get_strategy(sync)
     N, S, axis = worker.workers, worker.logical_shards, worker.axis
     s_local = worker.shards_per_worker
 
@@ -233,64 +262,37 @@ def make_worker_train_step(cfg: ArchConfig, sync: SyncConfig,
                                 + x.shape[1:]), batch)
         return jax.lax.map(one, shards)
 
-    def global_mean(tree):
-        return gathered_shard_mean(tree, axis, N, S)
+    ctx = StepContext(
+        optimizer=optimizer, grad_fn=shard_grads,
+        combine=lambda t: gathered_shard_mean(t, axis, N, S),
+        local_mean=lambda t: jax.tree.map(
+            lambda x: jnp.sum(x, 0) / s_local, t),
+        # sum * (1/S), NOT sum / S: gathered_shard_mean multiplies by the
+        # reciprocal, and the hogwild own/remote decomposition must use the
+        # same arithmetic so remote_now == 0 exactly when all shards are
+        # local (N=1 chaos == bsp for ANY logical_shards, not just pow2)
+        local_frac=lambda t: jax.tree.map(
+            lambda x: jnp.sum(x, 0) * (1.0 / S), t),
+        explicit_workers=True, axis=axis, n_workers=N)
 
     def step(state, batch):
-        params = state["params"]
-
-        if sync.mode == "chaos":
-            # staleness-1: apply last step's (already-reduced) global
-            # gradient now, compute fresh local gradients after — their
-            # all_gather gates only this step's OUTPUT (overlappable)
-            g_apply = state["sync"]["prev_grad"]
-            new_params, new_opt = optimizer.apply(params, g_apply,
-                                                  state["opt"], state["step"])
-            losses, metrics, grads = shard_grads(new_params, batch)
-            new_sync = dict(state["sync"])
-            new_sync["prev_grad"] = jax.tree.map(
-                lambda g, p: g.astype(p.dtype), global_mean(grads),
-                new_params)
-        elif sync.mode == "bsp":
-            losses, metrics, grads = shard_grads(params, batch)
-            new_params, new_opt = optimizer.apply(params, global_mean(grads),
-                                                  state["opt"], state["step"])
-            new_sync = dict(state["sync"])
-        elif sync.mode == "localsgd":
-            losses, metrics, grads = shard_grads(params, batch)
-            g_local = jax.tree.map(lambda x: jnp.sum(x, 0) / s_local, grads)
-            new_params, new_opt = optimizer.apply(params, g_local,
-                                                  state["opt"], state["step"])
-            new_params = localsgd_average(sync, new_params, state["step"])
-            new_sync = dict(state["sync"])
-        else:
-            raise ValueError(sync.mode)
-
-        packed = {**metrics, "loss": losses}
-        if sync.mode == "localsgd":
-            packed = jax.tree.map(lambda x: jnp.mean(x, 0), packed)
-            packed = jax.lax.pmean(packed, axis) if N > 1 else packed
-        else:
-            # same fixed-shape reduction as the gradients: the logged loss
-            # is bit-identical across worker counts too
-            packed = global_mean(packed)
-        new_state = {"params": new_params, "opt": new_opt, "sync": new_sync,
-                     "step": state["step"] + 1}
-        return new_state, packed
+        return strat.step(ctx, state, batch)
 
     return step
 
 
 def init_worker_state(cfg: ArchConfig, key, sync: SyncConfig,
                       worker: WorkerConfig, optimizer=None):
-    """TrainState for the worker-mesh route.  bsp/chaos keep every worker
-    identical, so their state is UNSTACKED (mesh-replicated) — byte-for-byte
-    the same checkpoint layout as a single-device run, which is what makes
-    bsp checkpoints worker-count-invariant.  localsgd workers genuinely
-    diverge between K-boundaries, so its state carries a leading (N, ...)
-    worker axis."""
+    """TrainState for the worker-mesh route.  Strategies whose workers stay
+    provably identical (bsp, chaos τ=0) keep UNSTACKED (mesh-replicated)
+    state — byte-for-byte the same checkpoint layout as a single-device
+    run, which is what makes those checkpoints worker-count-invariant.
+    Strategies whose workers genuinely diverge (localsgd, chaos τ>=1)
+    carry a leading (N, ...) worker axis."""
+    from repro.core.chaos import replicate_for_workers
+
     state = init_train_state(cfg, key, sync, optimizer)
-    if sync.mode == "localsgd":
+    if get_strategy(sync).stacked_state:
         state = replicate_for_workers(state, worker.workers)
     return state
 
@@ -299,20 +301,20 @@ def make_worker_superstep(cfg: ArchConfig, sync: SyncConfig,
                           worker: WorkerConfig, mesh, optimizer=None):
     """Superstep over the worker mesh: the K-step ``lax.scan`` runs INSIDE
     ``shard_map`` over ``mesh``'s 1-D worker axis, so per-step collectives
-    (gradient exchange / localsgd boundary averages) stay on-device across
-    all K steps and the host still dispatches once per superstep.
+    (gradient exchange / boundary averages) stay on-device across all K
+    steps and the host still dispatches once per superstep.
 
     Call with the GLOBAL stacked (K, B, ...) batch; shard_map splits axis 1
     over workers (worker w's slice == ``pipeline.worker_superstep_at(step,
-    k, N, w)``).  State specs follow ``init_worker_state``'s layout:
-    replicated for bsp/chaos, worker-sharded for localsgd.  Metrics are
+    k, N, w)``).  State specs follow ``init_worker_state``'s layout — the
+    strategy's ``shard_view`` (replicated or worker-stacked).  Metrics are
     replicated (K,) vectors.  jit'd with the TrainState donated.
     """
     from jax.experimental.shard_map import shard_map
 
     step = make_worker_train_step(cfg, sync, worker, optimizer)
-    stacked = sync.mode == "localsgd"
-    axis = worker.axis
+    strat = get_strategy(sync)
+    stacked = strat.stacked_state
 
     def superstep(state, batches):
         if stacked:
@@ -322,9 +324,9 @@ def make_worker_superstep(cfg: ArchConfig, sync: SyncConfig,
             state = jax.tree.map(lambda x: x[None], state)
         return state, metrics
 
-    state_spec = P(axis) if stacked else P()
+    state_spec = strat.shard_view(worker)
     fn = shard_map(superstep, mesh=mesh,
-                   in_specs=(state_spec, P(None, axis)),
+                   in_specs=(state_spec, P(None, worker.axis)),
                    out_specs=(state_spec, P()),
                    check_rep=False)
     return jax.jit(fn, donate_argnums=(0,))
@@ -337,5 +339,4 @@ def make_serve_step(cfg: ArchConfig):
         logits, new_cache = ops.decode(params, cache, tokens, cache_len)
         next_tok = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)
         return next_tok.astype(jnp.int32), new_cache
-
     return serve_step

@@ -1,0 +1,381 @@
+"""Pluggable synchronization-strategy engine (DESIGN.md §5).
+
+Every gradient-synchronization mode — how workers' gradients are combined,
+when parameter updates happen relative to backprop, what extra state rides
+the superstep scan carry, and how that state is laid out over the worker
+mesh — is one ``SyncStrategy`` subclass registered here by name.  The step
+builders in ``train/step.py`` and the driver in ``launch/train.py`` are
+strategy-agnostic: they build a ``StepContext`` describing the execution
+path (single-instance pjit vs explicit worker mesh) and delegate the whole
+step body to the strategy.  There are NO per-mode branches outside this
+module.
+
+Protocol (one strategy instance per ``SyncConfig``):
+
+``init_state(params)``      sync buffers carried in ``TrainState["sync"]``
+``state_specs(pspecs)``     logical PartitionSpecs matching ``init_state``
+``stacked_state``           worker-mesh layout: ``False`` = workers provably
+                            identical, state mesh-replicated (worker-count-
+                            invariant checkpoints); ``True`` = per-worker
+                            state with a leading ``(N, ...)`` axis
+``shard_view(worker)``      the shard_map PartitionSpec implied by the above
+``checkpoint_layout()``     human-readable layout contract for tooling
+``combine_grads`` is supplied BY the execution path via ``StepContext``
+                            (identity under implicit SPMD, the fixed-shape
+                            gathered shard mean on the worker mesh)
+``step(ctx, state, batch)`` the full train-step body (apply_update included)
+``boundary(ctx, params, step)``  end-of-step parameter hook (localsgd's
+                            K-step average; identity elsewhere)
+``layer_apply(ctx, sync_state, step)``  per-layer update hooks for the
+                            layerwise (non-instant-updates-during-backprop)
+                            CNN path (``models/cnn.py``)
+
+Registered strategies:
+
+``bsp``       paper strategy B: combined fresh gradients gate every update.
+``chaos``     staleness-τ controlled Hogwild (``SyncConfig.staleness``):
+              * τ=0 resolves to THE ``bsp`` strategy object itself —
+                bit-exactness to bsp is by construction, not by test luck;
+              * worker mesh, τ>=1: each worker applies its own gradient
+                contribution instantly and peers' contributions τ steps
+                late (ring buffer of remote terms; workers genuinely
+                diverge — the paper's arbitrary-order weight updates);
+              * pjit path, τ>=1: the whole globally-reduced gradient is
+                applied τ steps late (the reduction gates only the step
+                output, overlapping with compute); τ=1 reproduces the
+                historical staleness-1 exchange unchanged.
+``localsgd``  paper strategy-C flavour: purely local updates, parameters
+              averaged over workers every ``local_steps`` steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.chaos import (SyncConfig, compress_grads, localsgd_average,
+                              zeros_like_f32)
+
+STRATEGIES: dict[str, type] = {}
+
+
+def register(cls):
+    STRATEGIES[cls.name] = cls
+    return cls
+
+
+def sync_modes() -> list[str]:
+    """Registered mode names (drives the CLI choices in launch/train.py)."""
+    return sorted(STRATEGIES)
+
+
+def get_strategy(sync: SyncConfig) -> "SyncStrategy":
+    try:
+        cls = STRATEGIES[sync.mode]
+    except KeyError:
+        raise ValueError(
+            f"unknown sync mode {sync.mode!r}; registered strategies: "
+            f"{', '.join(sync_modes())}") from None
+    return cls(sync).resolve()
+
+
+def _identity(tree):
+    return tree
+
+
+@dataclasses.dataclass(frozen=True)
+class StepContext:
+    """Execution-path plumbing handed to a strategy.
+
+    The SAME strategy classes serve both the single-instance pjit path and
+    the explicit worker-mesh path; what differs is how gradients are
+    produced and reduced, and that difference lives here:
+
+    ``grad_fn(params, batch) -> (losses, metrics, grads)`` — pjit path:
+      scalar loss + one gradient tree; worker path: ``(s_local, ...)``
+      stacks of per-micro-shard losses/metrics/gradients.
+    ``combine``     local grads -> the GLOBAL mean over all shards/workers
+                    (identity under implicit SPMD; the worker-count-
+                    invariant gathered shard mean on the worker mesh).
+    ``local_mean``  local grads -> the mean over THIS worker's data only.
+    ``local_frac``  local grads -> this worker's additive term of the
+                    global mean (local shard sum / total shard count).
+    """
+    optimizer: object
+    grad_fn: Optional[Callable] = None
+    combine: Callable = _identity
+    local_mean: Callable = _identity
+    local_frac: Callable = _identity
+    explicit_workers: bool = False
+    axis: Optional[str] = None
+    n_workers: int = 1
+
+
+# ---------------------------------------------------------------------------
+# staleness ring buffer: τ params-shaped trees {"h0".."h{τ-1}"}; the slot
+# for step t holds the exchange produced at t, read back at t + τ (slot
+# index t % τ).  Slots are whole params-shaped trees selected with
+# whole-leaf jnp.where — NOT one (τ, ...)-stacked leaf with dynamic
+# gather/scatter, which changes XLA:CPU's fusion of the surrounding
+# gradient computation between scan trip counts and breaks the
+# K-grouping bit-exactness contract by 1 ulp (tests/test_sync_strategies
+# pins scan-vs-individual bit-exactness for τ ∈ {2, 4}).  τ=1 degenerates
+# to exactly the historical single prev-grad buffer.
+# ---------------------------------------------------------------------------
+def init_ring(params, tau: int) -> dict:
+    return {f"h{i}": jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype),
+                                  params)
+            for i in range(tau)}
+
+
+def ring_read(hist, step, tau: int):
+    idx = step % tau
+    out = hist["h0"]
+    for i in range(1, tau):
+        out = jax.tree.map(lambda a, b, i=i: jnp.where(idx == i, b, a),
+                           out, hist[f"h{i}"])
+    return out
+
+
+def ring_write(hist, step, tau: int, val):
+    if tau == 1:  # the single slot is always overwritten — no select, so
+        # τ=1 compiles to exactly the historical prev-grad graph
+        return {"h0": jax.tree.map(lambda h, v: v.astype(h.dtype),
+                                   hist["h0"], val)}
+    idx = step % tau
+    return {f"h{i}": jax.tree.map(
+        lambda h, v, i=i: jnp.where(idx == i, v.astype(h.dtype), h),
+        hist[f"h{i}"], val) for i in range(tau)}
+
+
+@register
+class BspStrategy:
+    """Bulk-synchronous (paper strategy B): the combined fresh gradient is
+    on the critical path of every update; workers stay provably identical,
+    so worker-mesh state is replicated and checkpoints are worker-count-
+    invariant."""
+
+    name = "bsp"
+    stacked_state = False     # worker mesh: state replicated
+    workers_identical = True  # metrics reduce with the same fixed-shape mean
+
+    def __init__(self, sync: SyncConfig):
+        self.sync = sync
+
+    def resolve(self) -> "SyncStrategy":
+        return self
+
+    # -- state ---------------------------------------------------------
+    def init_state(self, params) -> dict:
+        if self.sync.compress:
+            return {"residual": zeros_like_f32(params)}
+        return {}
+
+    def state_specs(self, pspecs) -> dict:
+        if self.sync.compress:
+            return {"residual": pspecs}
+        return {}
+
+    def shard_view(self, worker) -> P:
+        return P(worker.axis) if self.stacked_state else P()
+
+    def checkpoint_layout(self) -> str:
+        return ("worker-stacked (leading (N, ...) axis; checkpoints pin "
+                "the worker count)" if self.stacked_state else
+                "replicated (worker-count-invariant checkpoints)")
+
+    # -- shared pieces --------------------------------------------------
+    def _maybe_compress(self, grads, sync_state):
+        new_sync = dict(sync_state)
+        if self.sync.compress:
+            grads, new_sync["residual"] = compress_grads(
+                grads, sync_state["residual"])
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        return grads, new_sync
+
+    def _finish(self, ctx: StepContext, state, new_params, new_opt,
+                new_sync, losses, metrics):
+        packed = {**metrics, "loss": losses}
+        if self.workers_identical:
+            # same fixed-shape reduction as the gradients: the logged loss
+            # is bit-identical across worker counts too
+            packed = ctx.combine(packed)
+        else:
+            packed = ctx.local_mean(packed)
+            if ctx.axis is not None and ctx.n_workers > 1:
+                packed = jax.lax.pmean(packed, ctx.axis)
+        new_state = {"params": new_params, "opt": new_opt, "sync": new_sync,
+                     "step": state["step"] + 1}
+        return new_state, packed
+
+    def _reduce(self, ctx: StepContext, grads):
+        return ctx.combine(grads)
+
+    def boundary(self, ctx: StepContext, params, step):
+        return params
+
+    # -- the step body ---------------------------------------------------
+    def step(self, ctx: StepContext, state, batch):
+        losses, metrics, grads = ctx.grad_fn(state["params"], batch)
+        grads, new_sync = self._maybe_compress(grads, state["sync"])
+        g = self._reduce(ctx, grads)
+        new_params, new_opt = ctx.optimizer.apply(
+            state["params"], g, state["opt"], state["step"])
+        new_params = self.boundary(ctx, new_params, state["step"])
+        return self._finish(ctx, state, new_params, new_opt, new_sync,
+                            losses, metrics)
+
+    # -- layerwise hooks (models/cnn.py::loss_and_layerwise_update) ------
+    def layer_apply(self, ctx: StepContext, sync_state, step):
+        """Returns ``(apply_layer, finish)``: ``apply_layer(name, p_l, g_l)``
+        is called the moment layer l's gradient is produced (reverse layer
+        order) and returns the updated layer params; ``finish(grads)``
+        returns the new sync state given the full fresh-gradient tree."""
+        def apply_layer(name, p, g):
+            new_p, _ = ctx.optimizer.apply(p, ctx.combine(g), {}, step)
+            return new_p
+
+        def finish(grads):
+            del grads
+            return dict(sync_state)
+
+        return apply_layer, finish
+
+
+@register
+class LocalSGDStrategy(BspStrategy):
+    """Paper strategy-C flavour: purely local gradients; parameters averaged
+    over the worker axis every ``local_steps`` steps (workers diverge
+    between boundaries, so worker-mesh state is per-worker stacked)."""
+
+    name = "localsgd"
+    stacked_state = True
+    workers_identical = False
+
+    def _reduce(self, ctx: StepContext, grads):
+        return ctx.local_mean(grads)
+
+    def boundary(self, ctx: StepContext, params, step):
+        return localsgd_average(self.sync, params, step)
+
+
+@register
+class ChaosStrategy(BspStrategy):
+    """Staleness-τ controlled Hogwild (the paper's CHAOS proper).
+
+    τ = ``SyncConfig.staleness``.  τ=0 never reaches this class —
+    ``resolve()`` hands back a ``BspStrategy``, so chaos(τ=0) IS bsp (state
+    layout, checkpoints, and arithmetic identical by construction).
+
+    τ>=1, worker mesh (``ctx.explicit_workers``): each worker computes
+    gradients at its OWN current weights and applies, in the same step, its
+    own additive term of the global mean plus the τ-step-stale remote terms
+    from the ring buffer — local updates are instant, peers' updates are
+    non-instant and fold in without a barrier, in arbitrary order across
+    workers.  Workers genuinely diverge (transiently, by O(lr·τ) per the
+    delayed-SGD analysis), so state is worker-stacked.
+
+    τ>=1, pjit path: one logical instance — "peers" are the implicit
+    cross-replica reduction, so the whole combined gradient is applied τ
+    steps late and the reduction gates only the step output (overlappable).
+    τ=1 is the historical staleness-1 delayed exchange, bit-for-bit.
+    """
+
+    name = "chaos"
+    stacked_state = True       # τ>=1 worker mesh: workers diverge
+    workers_identical = False
+
+    def resolve(self) -> "SyncStrategy":
+        if self.sync.staleness == 0:
+            return BspStrategy(self.sync)
+        return self
+
+    def init_state(self, params) -> dict:
+        # ring slots in param dtype: gradients are produced in param dtype
+        # anyway and a τ-deep f32 copy of a large model would be the
+        # dominant sync-state cost
+        st = {"hist": init_ring(params, self.sync.staleness)}
+        if self.sync.compress:
+            st["residual"] = zeros_like_f32(params)
+        return st
+
+    def state_specs(self, pspecs) -> dict:
+        # each ring slot is params-shaped, so it shards exactly like params
+        st = {"hist": {f"h{i}": pspecs
+                       for i in range(self.sync.staleness)}}
+        if self.sync.compress:
+            st["residual"] = pspecs
+        return st
+
+    def step(self, ctx: StepContext, state, batch):
+        if ctx.explicit_workers:
+            return self._hogwild_step(ctx, state, batch)
+        return self._delayed_step(ctx, state, batch)
+
+    def _delayed_step(self, ctx: StepContext, state, batch):
+        """pjit path: 1) update with the τ-step-stale globally-reduced
+        gradient (available immediately, no blocking collective); 2) fresh
+        gradients at the new params -> ring slot t, read back at t+τ; their
+        reduction gates only the step OUTPUT (overlappable)."""
+        tau = self.sync.staleness
+        hist = state["sync"]["hist"]
+        stale = ring_read(hist, state["step"], tau)
+        new_params, new_opt = ctx.optimizer.apply(
+            state["params"], stale, state["opt"], state["step"])
+        losses, metrics, grads = ctx.grad_fn(new_params, batch)
+        grads, new_sync = self._maybe_compress(grads, state["sync"])
+        new_sync["hist"] = ring_write(hist, state["step"], tau,
+                                      ctx.combine(grads))
+        return self._finish(ctx, state, new_params, new_opt, new_sync,
+                            losses, metrics)
+
+    def _hogwild_step(self, ctx: StepContext, state, batch):
+        """Worker mesh: own term instant + remote terms τ steps stale."""
+        tau = self.sync.staleness
+        hist = state["sync"]["hist"]
+        losses, metrics, grads = ctx.grad_fn(state["params"], batch)
+        own = ctx.local_frac(grads)
+        stale_remote = ring_read(hist, state["step"], tau)
+        g = jax.tree.map(lambda o, s: o + s.astype(jnp.float32),
+                         own, stale_remote)
+        new_params, new_opt = ctx.optimizer.apply(
+            state["params"], g, state["opt"], state["step"])
+        # this step's remote term: the all_gather'd global mean minus the
+        # own term — it gates only the ring write (the step output), never
+        # this step's update
+        remote_now = jax.tree.map(lambda a, o: a - o, ctx.combine(grads),
+                                  own)
+        new_sync = dict(state["sync"])
+        new_sync["hist"] = ring_write(hist, state["step"], tau, remote_now)
+        return self._finish(ctx, state, new_params, new_opt, new_sync,
+                            losses, metrics)
+
+    def layer_apply(self, ctx: StepContext, sync_state, step):
+        """Layerwise chaos (paper §3 order): the forward pass runs at the
+        pre-update weights; during backprop each layer's update applies the
+        τ-step-stale exchanged gradient the moment that layer's fresh
+        gradient exists, and the fresh gradients enter the ring for step
+        t+τ.  (The non-layerwise pjit chaos instead evaluates gradients at
+        the post-update weights — the overlap-friendly SPMD ordering; both
+        are staleness-τ members of the same family, DESIGN.md §5.)"""
+        tau = self.sync.staleness
+        stale = ring_read(sync_state["hist"], step, tau)
+
+        def apply_layer(name, p, g):
+            del g  # the stale exchange, not the fresh local grad, updates
+            new_p, _ = ctx.optimizer.apply(p, stale[name], {}, step)
+            return new_p
+
+        def finish(grads):
+            new_sync = dict(sync_state)
+            new_sync["hist"] = ring_write(sync_state["hist"], step, tau,
+                                          ctx.combine(grads))
+            return new_sync
+
+        return apply_layer, finish
+
+
+SyncStrategy = BspStrategy  # protocol root: every strategy subclasses it

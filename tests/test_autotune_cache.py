@@ -1,0 +1,73 @@
+"""Autotune on-disk cache integrity under concurrent writers (satellite:
+two processes tuning the same net must never corrupt the JSON cache).
+
+The regression this pins: ``_save_disk`` used a SHARED ``path + ".tmp"``
+scratch name, so two concurrent writers could interleave bytes in one tmp
+file before the atomic rename — now each writer renames from a
+process-unique ``mkstemp`` file, so the cache file is always one writer's
+complete, parseable document (individual last-writer key races are
+acceptable; a torn file is not)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+_WRITER = """
+    import os, sys
+    from repro.kernels import autotune as AT
+
+    tag = sys.argv[1]
+    for i in range(40):
+        # force a fresh disk read-merge-write cycle per record, maximising
+        # writer interleaving
+        AT.clear_memory_cache()
+        AT.record(f"conv_fwd|{tag}|shape{i}|float32|cpu|interp=1",
+                  {"batch_block": 8, "row_block": i + 1}, 100.0 + i, {},
+                  iters=1)
+    print("DONE", tag)
+"""
+
+
+def test_concurrent_writers_never_corrupt_cache(tmp_path):
+    cache = str(tmp_path / "autotune.json")
+    env = dict(os.environ, PYTHONPATH=SRC, REPRO_AUTOTUNE_CACHE=cache)
+    procs = [subprocess.Popen(
+        [sys.executable, "-c", textwrap.dedent(_WRITER), tag],
+        env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True)
+        for tag in ("writerA", "writerB")]
+    for p in procs:
+        out, err = p.communicate(timeout=300)
+        assert p.returncode == 0, err[-2000:]
+        assert "DONE" in out
+
+    # the file must be one complete JSON document...
+    with open(cache) as f:
+        data = json.load(f)
+    # ...containing entries from BOTH writers (merge-on-write), and no
+    # leftover tmp scratch files
+    tags = {k.split("|")[1] for k in data}
+    assert tags == {"writerA", "writerB"}, tags
+    assert len(data) >= 40, f"lost too many entries: {len(data)}"
+    leftovers = [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+    assert not leftovers, leftovers
+
+
+def test_record_roundtrips_through_unique_tmp(tmp_path):
+    """Single-writer sanity on the new write path: record -> reload."""
+    cache = str(tmp_path / "cache.json")
+    os.environ["REPRO_AUTOTUNE_CACHE"] = cache
+    try:
+        from repro.kernels import autotune as AT
+        AT.clear_memory_cache()
+        AT.record("op|plain|1_2|float32|cpu|interp=1",
+                  {"batch_block": 4}, 7.0, {"{}": 7.0}, iters=2)
+        AT.clear_memory_cache()
+        entry = AT.lookup("op|plain|1_2|float32|cpu|interp=1")
+        assert entry is not None and entry["config"] == {"batch_block": 4}
+    finally:
+        del os.environ["REPRO_AUTOTUNE_CACHE"]
+        from repro.kernels import autotune as AT
+        AT.clear_memory_cache()

@@ -76,6 +76,22 @@ def test_kill_and_restart_resumes(tmp_path):
     assert "done" in second.stdout
 
 
+def test_restore_shape_mismatch_names_leaf_path(tmp_path):
+    """Satellite bugfix: a leaf-shape mismatch on restore must name the
+    offending leaf's tree path and print expected-vs-actual shapes, not
+    raise a bare shape error."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(7, _state())
+    bad_template = _state()
+    bad_template["params"]["w"] = jnp.zeros((4, 8), jnp.float32)
+    with pytest.raises(ValueError) as ei:
+        mgr.restore(bad_template)
+    msg = str(ei.value)
+    assert "['params']['w']" in msg, msg         # the offending leaf path
+    assert "(8, 8)" in msg and "(4, 8)" in msg, msg  # actual vs expected
+    assert "different state layout" in msg
+
+
 def test_elastic_restore_under_new_sharding(tmp_path):
     """Restore with explicit shardings (the elastic-rescale path): arrays
     come back on the requested devices."""

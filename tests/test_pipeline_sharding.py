@@ -67,6 +67,48 @@ def test_queue_mode_epoch_coverage_across_worker_shards(n, epoch):
         f"epoch {epoch} with {n} workers must cover every sample once")
 
 
+@settings(max_examples=25, deadline=None)
+@given(st.sampled_from([3, 5, 7, 12, 24]), st.integers(0, 40))
+def test_queue_mode_non_dividing_batch_is_epoch_stream(b, step):
+    """Satellite: with a batch size that does NOT divide the dataset
+    length, queue mode is the contiguous chunk [step*B, (step+1)*B) of the
+    infinite stream of concatenated per-epoch permutations — batches
+    straddle epoch boundaries instead of dropping the epoch tail or
+    duplicating wrapped-around samples."""
+    pipe = ImagePipeline(IMAGES, LABELS, batch=b, sample_mode="queue")
+    got = pipe.batch_at(step)["images"][:, 0, 0, 0].astype(int)
+    assert got.shape == (b,)
+    # reference stream: concatenated epoch permutations (the pipeline's
+    # documented seeding contract)
+    lo, hi = step * b, (step + 1) * b
+    perms = [np.random.default_rng(
+        np.random.SeedSequence([pipe.seed, e])).permutation(N_IMAGES)
+        for e in range(hi // N_IMAGES + 1)]
+    stream = np.concatenate(perms)
+    np.testing.assert_array_equal(got, stream[lo:hi])
+    # determinism: pure function of step (no cache-order dependence)
+    np.testing.assert_array_equal(
+        got, pipe.batch_at(step)["images"][:, 0, 0, 0].astype(int))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from([5, 7, 12]), st.integers(0, 2))
+def test_queue_mode_non_dividing_batch_epoch_coverage(b, epoch):
+    """Every window of N_IMAGES consecutive stream samples that aligns with
+    an epoch boundary covers the dataset exactly once — no sample is
+    dropped or duplicated by a non-dividing batch size."""
+    pipe = ImagePipeline(IMAGES, LABELS, batch=b, sample_mode="queue")
+    lo, hi = epoch * N_IMAGES, (epoch + 1) * N_IMAGES
+    seen = []
+    for t in range(lo // b, hi // b + 1):
+        ids = pipe.batch_at(t)["images"][:, 0, 0, 0].astype(int).tolist()
+        for j, g in enumerate(range(t * b, (t + 1) * b)):
+            if lo <= g < hi:
+                seen.append(ids[j])
+    assert sorted(seen) == list(range(N_IMAGES)), (
+        f"epoch {epoch} with batch {b} must cover every sample once")
+
+
 def test_worker_shard_validation():
     pipe = ImagePipeline(IMAGES, LABELS, batch=8, sample_mode="queue")
     with pytest.raises(ValueError, match="divisible by n_workers"):

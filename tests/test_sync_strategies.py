@@ -1,0 +1,420 @@
+"""SyncStrategy engine semantics (DESIGN.md §5).
+
+The contracts:
+  * the registry is the ONLY mode dispatch — step builders and the driver
+    are strategy-agnostic, unknown modes fail with a clear error;
+  * chaos(τ=0) RESOLVES to the bsp strategy object, so it is bit-exact to
+    bsp by construction — verified end-to-end anyway (single path, Pallas
+    kernel path, worker mesh, and driver die/resume across worker counts);
+  * chaos(τ) generalises the staleness-1 exchange: the first τ steps apply
+    the zero-initialised ring, and step τ+1's update equals bsp's step-1
+    update on the same batch;
+  * layerwise (per-layer non-instant updates during backprop) is bit-exact
+    to the batched update for bsp+SGD on both the XLA and kernel paths,
+    keeps chaos' staleness property, and composes with the superstep scan.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.core.chaos import SyncConfig
+from repro.data.mnist import make_dataset
+from repro.data.pipeline import ImagePipeline
+from repro.optim import sgd
+from repro.train.step import (init_train_state, make_optimizer,
+                              make_superstep, make_train_step)
+from repro.train.sync import (BspStrategy, ChaosStrategy, get_strategy,
+                              sync_modes)
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _states_bitexact(s1, s2, msg=""):
+    for a, b in zip(jax.tree.leaves(s1), jax.tree.leaves(s2)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32),
+                                      err_msg=msg)
+
+
+def _cnn(use_kernel=False):
+    import dataclasses
+    cfg = C.get("chaos-small")
+    if use_kernel:
+        cfg = dataclasses.replace(cfg, use_kernel=True)
+    imgs, labels = make_dataset(64, seed=0)
+    pipe = ImagePipeline(imgs, labels, batch=8, sample_mode="queue")
+    return cfg, pipe
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def test_registry_contents_and_unknown_mode():
+    assert sync_modes() == ["bsp", "chaos", "localsgd"]
+    with pytest.raises(ValueError, match="registered strategies"):
+        get_strategy(SyncConfig(mode="definitely-not-a-mode"))
+
+
+def test_chaos_tau0_resolves_to_bsp_object():
+    strat = get_strategy(SyncConfig("chaos", staleness=0))
+    assert type(strat) is BspStrategy  # not a subclass: THE bsp strategy
+    assert strat.init_state({"w": jnp.zeros((2,))}) == {}
+    assert not strat.stacked_state
+    tau1 = get_strategy(SyncConfig("chaos", staleness=1))
+    assert type(tau1) is ChaosStrategy
+    assert tau1.stacked_state
+
+
+def test_negative_staleness_rejected():
+    with pytest.raises(ValueError, match="staleness"):
+        SyncConfig("chaos", staleness=-1)
+
+
+def test_step_builders_have_no_mode_branches():
+    """Acceptance criterion: no per-mode dispatch outside the strategy
+    modules — train/step.py and launch/train.py must not branch on the
+    sync mode name."""
+    import re
+    for rel in ("src/repro/train/step.py", "src/repro/launch/train.py"):
+        path = os.path.join(os.path.dirname(__file__), "..", rel)
+        with open(path) as f:
+            src = f.read()
+        hits = re.findall(r"""mode\s*==\s*['"](bsp|chaos|localsgd)['"]""",
+                          src)
+        assert not hits, f"{rel} still branches on sync mode: {hits}"
+
+
+# ---------------------------------------------------------------------------
+# chaos(τ=0) ≡ bsp, single-instance path
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_chaos_tau0_bitexact_vs_bsp_single_path(use_kernel):
+    cfg, pipe = _cnn(use_kernel)
+    states = {}
+    for sync in (SyncConfig("bsp"), SyncConfig("chaos", staleness=0)):
+        opt = make_optimizer(cfg, total_steps=8)
+        fn = jax.jit(make_superstep(cfg, sync, opt))
+        s = init_train_state(cfg, jax.random.key(0), sync, opt)
+        s, m = fn(s, pipe.superstep_at(0, 3))
+        states[sync.mode] = (s, np.asarray(m["loss"]))
+    _states_bitexact(states["bsp"][0], states["chaos"][0],
+                     f"tau=0 vs bsp kernel={use_kernel}")
+    np.testing.assert_array_equal(states["bsp"][1], states["chaos"][1])
+
+
+def test_chaos_tau_staleness_property_single_path():
+    """τ=2 with a constant-lr SGD on one repeated batch: steps 1..τ are
+    no-ops (zero-initialised ring) and step τ+1's update equals bsp's
+    step-1 update — the τ-generalisation of the staleness-1 rule."""
+    cfg, pipe = _cnn()
+    opt = sgd(lambda s: 0.05)
+    batch = pipe.batch_at(0)
+    sync_c = SyncConfig("chaos", staleness=2)
+    step_c = jax.jit(make_train_step(cfg, sync_c, opt))
+    step_b = jax.jit(make_train_step(cfg, SyncConfig("bsp"), opt))
+    s_c = init_train_state(cfg, jax.random.key(0), sync_c, opt)
+    s_b = init_train_state(cfg, jax.random.key(0), SyncConfig("bsp"), opt)
+    p0 = jax.tree.map(np.asarray, s_c["params"])
+
+    s_c, _ = step_c(s_c, batch)
+    _states_bitexact(p0, s_c["params"], "step 1 must be a no-op")
+    s_c, _ = step_c(s_c, batch)
+    _states_bitexact(p0, s_c["params"], "step 2 must be a no-op (tau=2)")
+    s_c, _ = step_c(s_c, batch)
+    s_b, _ = step_b(s_b, batch)
+    # cross-program comparison (chaos's gradient feeds the ring selects,
+    # bsp's feeds the optimizer, so XLA fuses the two programs differently
+    # at the 1-ulp level) — same tolerance as test_chaos.py's staleness-1
+    # version of this property
+    for a, b in zip(jax.tree.leaves(s_c["params"]),
+                    jax.tree.leaves(s_b["params"])):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            atol=1e-6,
+            err_msg="step 3 == bsp step 1 (same batch, 2-step-stale grad)")
+
+
+@pytest.mark.parametrize("tau", [2, 4])
+def test_superstep_bitexact_vs_individual_dispatches_tau(tau):
+    """The τ-deep ring buffer rides the scan carry: K=4 scanned is
+    bit-identical to 4 single-step dispatches for any τ."""
+    cfg, pipe = _cnn()
+    sync = SyncConfig("chaos", staleness=tau)
+    opt = make_optimizer(cfg, total_steps=8)
+    fn = jax.jit(make_superstep(cfg, sync, opt))
+    s1 = init_train_state(cfg, jax.random.key(0), sync, opt)
+    s2 = init_train_state(cfg, jax.random.key(0), sync, opt)
+    for t in range(4):
+        s1, _ = fn(s1, pipe.superstep_at(t, 1))
+    s2, _ = fn(s2, pipe.superstep_at(0, 4))
+    _states_bitexact(s1, s2, f"tau={tau} scan vs individual")
+
+
+def test_chaos_ring_state_shape_and_specs():
+    """The τ-deep ring is τ params-shaped slot trees (h0..h{τ-1}) in param
+    dtype, each sharded exactly like params."""
+    cfg, _ = _cnn()
+    sync = SyncConfig("chaos", staleness=3)
+    opt = make_optimizer(cfg, total_steps=8)
+    state = init_train_state(cfg, jax.random.key(0), sync, opt)
+    assert sorted(state["sync"]["hist"]) == ["h0", "h1", "h2"]
+    for slot in state["sync"]["hist"].values():
+        for p, h in zip(jax.tree.leaves(state["params"]),
+                        jax.tree.leaves(slot)):
+            assert h.shape == p.shape and h.dtype == p.dtype
+    from repro.train.step import state_specs
+    specs = state_specs(cfg, sync, opt)
+    assert sorted(specs["sync"]["hist"]) == ["h0", "h1", "h2"]
+    for slot_spec in specs["sync"]["hist"].values():
+        assert jax.tree.structure(
+            slot_spec, is_leaf=lambda x: x is None) is not None
+
+
+# ---------------------------------------------------------------------------
+# worker mesh: τ=0 ≡ bsp bit-exact, τ>=1 stacked + diverging
+# ---------------------------------------------------------------------------
+def _run_sub(code: str, n_dev: int = 8):
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={n_dev}",
+               PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+_WORKER_SETUP = """
+    import dataclasses
+    import jax, jax.numpy as jnp, numpy as np
+    import repro.configs as C
+    from repro.core.chaos import SyncConfig
+    from repro.core.types import WorkerConfig
+    from repro.data.mnist import make_dataset
+    from repro.data.pipeline import ImagePipeline
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.train import put_worker_sharded
+    from repro.train.step import (init_worker_state, make_optimizer,
+                                  make_worker_superstep)
+
+    cfg = C.get("chaos-small")
+    imgs, labels = make_dataset(128, seed=0)
+    pipe = ImagePipeline(imgs, labels, batch=8, sample_mode="queue")
+
+    def run(n, mode, tau=1, steps=4, K=2, cfg=cfg):
+        worker = WorkerConfig(workers=n)
+        mesh = make_host_mesh(n)
+        sync = SyncConfig(mode, staleness=tau, axis_name=worker.axis)
+        opt = make_optimizer(cfg, total_steps=64)
+        fn = make_worker_superstep(cfg, sync, worker, mesh, opt)
+        state = init_worker_state(cfg, jax.random.key(0), sync, worker, opt)
+        losses = []
+        for s in range(0, steps, K):
+            state, m = fn(state, put_worker_sharded(pipe, s, K, mesh,
+                                                    worker))
+            losses.extend(np.asarray(m["loss"]).tolist())
+        return jax.tree.map(np.asarray, state), losses
+
+    def assert_tree_equal(a, b, msg=""):
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                          err_msg=msg)
+"""
+
+
+def test_chaos_tau0_bitexact_vs_bsp_worker_mesh():
+    """chaos τ=0 on the worker mesh: full TrainState AND the logged (K,)
+    loss vectors bit-exact vs bsp at N=1/2/4 — and worker-count-invariant
+    like bsp (the acceptance criterion)."""
+    out = _run_sub(_WORKER_SETUP + """
+    s_b4, l_b4 = run(4, "bsp")
+    for n in (1, 2, 4):
+        s_c, l_c = run(n, "chaos", tau=0)
+        assert_tree_equal(s_b4, s_c, f"chaos tau=0 N={n} vs bsp N=4")
+        np.testing.assert_array_equal(np.asarray(l_b4), np.asarray(l_c))
+    print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_chaos_tau0_bitexact_kernel_path_worker_mesh():
+    out = _run_sub(_WORKER_SETUP + """
+    kcfg = dataclasses.replace(cfg, use_kernel=True)
+    s_b, l_b = run(2, "bsp", steps=2, cfg=kcfg)
+    s_c, l_c = run(2, "chaos", tau=0, steps=2, cfg=kcfg)
+    assert np.all(np.isfinite(np.asarray(l_b)))
+    assert_tree_equal(s_b, s_c, "kernel path chaos tau=0 vs bsp")
+    np.testing.assert_array_equal(np.asarray(l_b), np.asarray(l_c))
+    print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_chaos_tau_worker_state_stacked_and_diverging():
+    """τ>=1 workers hold their own weights (controlled Hogwild): state is
+    (N, ...)-stacked, workers diverge, and at N=1 (no peers — every shard
+    is local) the updates match bsp exactly."""
+    out = _run_sub(_WORKER_SETUP + """
+    s_c, _ = run(4, "chaos", tau=2, steps=3, K=1)
+    leaf = jax.tree.leaves(s_c["params"])[0]
+    assert leaf.shape[0] == 4, "tau>=1 worker state must be stacked"
+    assert not np.allclose(leaf[0], leaf[1]), "workers must diverge"
+    # hist ring is per worker too: tau slot trees, each (N, ...)-stacked
+    assert sorted(s_c["sync"]["hist"]) == ["h0", "h1"]
+    h = jax.tree.leaves(s_c["sync"]["hist"]["h0"])[0]
+    assert h.shape[0] == 4, h.shape
+
+    s_1, l_1 = run(1, "chaos", tau=2)
+    s_b, l_b = run(1, "bsp")
+    for a, b in zip(jax.tree.leaves(s_1["params"]),
+                    jax.tree.leaves(s_b["params"])):
+        np.testing.assert_array_equal(np.asarray(a)[0], np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(l_1), np.asarray(l_b))
+    print("OK")
+    """)
+    assert "OK" in out
+
+
+def _run_driver(args, ckpt_dir, n_dev=8, die_at=None):
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={n_dev}",
+               PYTHONPATH=SRC)
+    cmd = [sys.executable, "-m", "repro.launch.train", "--arch",
+           "chaos-small", "--steps", "8", "--superstep", "4",
+           "--ckpt-every", "4", "--ckpt-dir", ckpt_dir] + args
+    if die_at is not None:
+        cmd += ["--die-at-step", str(die_at)]
+    return subprocess.run(cmd, capture_output=True, text=True, env=env,
+                          timeout=900)
+
+
+def test_driver_die_resume_chaos_tau0_across_worker_counts(tmp_path):
+    """Acceptance criterion: chaos τ=0 through the driver — die at a
+    superstep boundary under N=4, resume under N=2, and the final
+    checkpoint is bit-identical to an uninterrupted N=4 run's (τ=0
+    checkpoints are worker-count-invariant, exactly like bsp)."""
+    a, b = str(tmp_path / "a"), str(tmp_path / "b")
+    args = ["--workers", "4", "--sync", "chaos", "--staleness", "0"]
+
+    first = _run_driver(args, a, die_at=4)
+    assert first.returncode == 17, first.stderr[-2000:]
+    second = _run_driver(["--workers", "2", "--sync", "chaos",
+                          "--staleness", "0"], a)
+    assert second.returncode == 0, second.stderr[-2000:]
+    assert "resumed from step 4" in second.stdout
+    straight = _run_driver(args, b)
+    assert straight.returncode == 0, straight.stderr[-2000:]
+
+    fa = np.load(os.path.join(a, "step_0000000008", "arrays.npz"))
+    fb = np.load(os.path.join(b, "step_0000000008", "arrays.npz"))
+    assert fa.files == fb.files
+    for k in fa.files:
+        np.testing.assert_array_equal(fa[k], fb[k])
+
+
+def test_driver_chaos_tau_checkpoint_pins_worker_count(tmp_path):
+    """τ>=1 worker state genuinely diverges, so its stacked checkpoint must
+    refuse a different worker count — and the error names the offending
+    leaf path with both shapes (satellite bugfix)."""
+    d = str(tmp_path / "tau2")
+    first = _run_driver(["--workers", "4", "--sync", "chaos",
+                         "--staleness", "2"], d, die_at=4)
+    assert first.returncode == 17, first.stderr[-2000:]
+    bad = _run_driver(["--workers", "2", "--sync", "chaos",
+                       "--staleness", "2"], d)
+    assert bad.returncode != 0
+    assert "different state layout" in bad.stderr
+    assert "['params']" in bad.stderr  # leaf path named
+
+
+# ---------------------------------------------------------------------------
+# layerwise: per-layer non-instant updates during backprop
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_layerwise_bsp_bitexact_vs_batched_update(use_kernel):
+    """Applying dW_l the moment layer l's gradient is produced (reverse
+    layer order, chained in the graph) computes bit-identically to the
+    whole-tree update for SGD — on both the XLA and Pallas-kernel paths."""
+    cfg, pipe = _cnn(use_kernel)
+    opt = make_optimizer(cfg, total_steps=8)
+    s_ref = init_train_state(cfg, jax.random.key(0), SyncConfig("bsp"), opt)
+    s_lw = init_train_state(cfg, jax.random.key(0),
+                            SyncConfig("bsp", layerwise=True), opt)
+    ref = jax.jit(make_superstep(cfg, SyncConfig("bsp"), opt))
+    lw = jax.jit(make_superstep(cfg, SyncConfig("bsp", layerwise=True),
+                                opt))
+    k = 2 if use_kernel else 4
+    s_ref, m_ref = ref(s_ref, pipe.superstep_at(0, k))
+    s_lw, m_lw = lw(s_lw, pipe.superstep_at(0, k))
+    _states_bitexact(s_ref["params"], s_lw["params"],
+                     f"layerwise kernel={use_kernel}")
+    np.testing.assert_array_equal(np.asarray(m_ref["loss"]),
+                                  np.asarray(m_lw["loss"]))
+
+
+def test_layerwise_chaos_staleness_property():
+    """Layerwise chaos τ=1 (the paper's ordering: forward at pre-update
+    weights, per-layer stale updates during backprop): step 1 is a no-op
+    and step 2's update equals bsp's step-1 update on the same batch."""
+    cfg, pipe = _cnn()
+    opt = sgd(lambda s: 0.05)
+    batch = pipe.batch_at(0)
+    sync = SyncConfig("chaos", staleness=1, layerwise=True)
+    step_c = jax.jit(make_train_step(cfg, sync, opt))
+    step_b = jax.jit(make_train_step(cfg, SyncConfig("bsp"), opt))
+    s_c = init_train_state(cfg, jax.random.key(0), sync, opt)
+    s_b = init_train_state(cfg, jax.random.key(0), SyncConfig("bsp"), opt)
+    p0 = jax.tree.map(np.asarray, s_c["params"])
+    s_c, _ = step_c(s_c, batch)
+    _states_bitexact(p0, s_c["params"], "layerwise chaos step 1 no-op")
+    s_c, _ = step_c(s_c, batch)
+    s_b, _ = step_b(s_b, batch)
+    _states_bitexact(s_c["params"], s_b["params"],
+                     "layerwise chaos step 2 == bsp step 1")
+
+
+def test_layerwise_localsgd_single_replica_matches_bsp():
+    """localsgd's boundary hook composes with the layerwise walk; on a
+    single replica the average is the identity, so it matches bsp."""
+    cfg, pipe = _cnn()
+    opt = make_optimizer(cfg, total_steps=8)
+    lw_b = jax.jit(make_superstep(cfg, SyncConfig("bsp", layerwise=True),
+                                  opt))
+    lw_l = jax.jit(make_superstep(
+        cfg, SyncConfig("localsgd", local_steps=2, layerwise=True), opt))
+    s_b = init_train_state(cfg, jax.random.key(0),
+                           SyncConfig("bsp", layerwise=True), opt)
+    s_l = init_train_state(
+        cfg, jax.random.key(0),
+        SyncConfig("localsgd", local_steps=2, layerwise=True), opt)
+    s_b, _ = lw_b(s_b, pipe.superstep_at(0, 4))
+    s_l, _ = lw_l(s_l, pipe.superstep_at(0, 4))
+    _states_bitexact(s_b["params"], s_l["params"])
+
+
+def test_layerwise_rejects_unsupported_configs():
+    opt = make_optimizer(C.smoke("qwen3-14b"), total_steps=8)
+    with pytest.raises(NotImplementedError, match="layerwise"):
+        make_train_step(C.smoke("qwen3-14b"),
+                        SyncConfig("bsp", layerwise=True), opt)
+    cfg, _ = _cnn()
+    from repro.optim import adamw
+    with pytest.raises(NotImplementedError, match="stateless"):
+        make_train_step(cfg, SyncConfig("bsp", layerwise=True),
+                        adamw(lambda s: 1e-3))
+    with pytest.raises(NotImplementedError, match="compression"):
+        make_train_step(cfg, SyncConfig("bsp", layerwise=True,
+                                        compress=True),
+                        sgd(lambda s: 1e-3))
+    from repro.core.types import WorkerConfig
+    from repro.train.step import make_worker_train_step
+    with pytest.raises(NotImplementedError, match="worker-mesh"):
+        make_worker_train_step(cfg, SyncConfig("bsp", layerwise=True),
+                               WorkerConfig(workers=1))

@@ -97,28 +97,61 @@ def test_bsp_bitexact_across_worker_counts():
     assert "OK" in out
 
 
-def test_chaos_staleness1_update_rule_at_n4():
-    """chaos at N=4: step 1 applies the zero-initialised staleness buffer
-    (params unchanged), and step 2's update equals bsp's step-1 update on
-    the same batch — w_{t+1} = w_t - lr * mean_i g_i(w_{t-1}) exactly."""
+def test_chaos_hogwild_update_rule_at_n2():
+    """True CHAOS semantics on the worker mesh (staleness τ=1, N=2): each
+    worker applies its OWN additive term of the global gradient mean
+    instantly every step and folds peers' terms in one step late —
+    w^i_{t+1} = w^i_t - lr * (own_i(w^i_t) + remote_i(t-1)) — verified for
+    3 steps against a plain-JAX reference that implements the recurrence
+    shard by shard."""
     out = _run_sub(_SETUP + """
+    from repro.models.api import get_ops
     from repro.optim import sgd
-    opt = sgd(lambda s: 0.05)  # constant lr: shifted steps keep equal lr
 
-    fn_c, s_c, mesh, worker = build(4, "chaos", opt=opt)
-    fn_b, s_b, _, _ = build(4, "bsp", opt=opt)
-    p0 = jax.tree.map(np.asarray, s_c["params"])
-    batch = put_worker_sharded(pipe, 0, 1, mesh, worker)
+    lr = 0.05
+    opt = sgd(lambda s: lr)
+    ops = get_ops(cfg)
+    N, S = 2, 8  # workers, logical shards (batch 8 -> 1 image per shard)
 
-    s_c1, _ = fn_c(s_c, batch)
-    assert_tree_equal(p0, s_c1["params"], "chaos step 1 must be a no-op")
+    fn, state, mesh, worker = build(N, "chaos", opt=opt)
+    assert worker.logical_shards == S
 
-    batch = put_worker_sharded(pipe, 0, 1, mesh, worker)
-    s_c2, _ = fn_c(s_c1, batch)
-    batch = put_worker_sharded(pipe, 0, 1, mesh, worker)
-    s_b1, _ = fn_b(s_b, batch)
-    assert_tree_equal(s_c2["params"], s_b1["params"],
-                      "chaos step 2 == bsp step 1 (same batch, stale grad)")
+    # reference: per-worker params, per-shard single-image gradients
+    def shard_grad(p, img, lab):
+        b = {"images": img[None], "labels": lab[None]}
+        return jax.grad(lambda p: ops.loss(p, b)[0])(p)
+
+    p_ref = [ops.init(jax.random.key(0)) for _ in range(N)]
+    remote_prev = [jax.tree.map(lambda x: jnp.zeros_like(x), p_ref[0])
+                   for _ in range(N)]
+    for t in range(3):
+        b = pipe.batch_at(t)
+        own = []
+        for w in range(N):
+            lanes = range(w * S // N, (w + 1) * S // N)
+            gs = [shard_grad(p_ref[w], b["images"][s], b["labels"][s])
+                  for s in lanes]
+            own.append(jax.tree.map(
+                lambda *g: sum(g[1:], g[0]) / S, *gs))
+        gmean = jax.tree.map(lambda *g: sum(g[1:], g[0]), *own)
+        for w in range(N):
+            p_ref[w] = jax.tree.map(
+                lambda p, o, r: p - lr * (o + r),
+                p_ref[w], own[w], remote_prev[w])
+            remote_prev[w] = jax.tree.map(lambda gm, o: gm - o,
+                                          gmean, own[w])
+
+    for t in range(3):
+        state, _ = fn(state, put_worker_sharded(pipe, t, 1, mesh, worker))
+    got = jax.tree.map(np.asarray, state["params"])
+    for w in range(N):
+        for a, b_ in zip(jax.tree.leaves(got),
+                         jax.tree.leaves(jax.tree.map(np.asarray,
+                                                      p_ref[w]))):
+            np.testing.assert_allclose(a[w], b_, atol=1e-5, rtol=1e-5)
+    # workers genuinely diverged (arbitrary-order updates)
+    leaf = jax.tree.leaves(got)[0]
+    assert not np.allclose(leaf[0], leaf[1]), "workers must diverge"
     print("OK")
     """)
     assert "OK" in out
