@@ -1,0 +1,94 @@
+"""Merge a partial worker-scaling re-measurement into BENCH_scaling.json.
+
+Workflow (refresh only some modes' rows after a sync-engine change,
+instead of re-running the whole hours-long grid):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m benchmarks.scaling --modes chaos > new.json
+    PYTHONPATH=src python -m benchmarks.merge_scaling new.json
+
+Rows whose ``mode`` appears in the patch replace the artifact's rows for
+that mode wholesale; ``speedup_vs_1`` / ``model_speedup`` and the
+human-readable ``rows`` entries are recomputed for the new cells exactly
+like ``benchmarks/run.py::bench_scaling`` does (speedup baselines come
+from the patch's own N=1 cells, so a partial sweep without N=1 yields
+NaN rather than a stale cross-engine ratio).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+DEFAULT_ARTIFACT = os.path.join(os.path.dirname(__file__), "..",
+                                "BENCH_scaling.json")
+
+
+def merge(doc: dict, new_runs: list, note: str | None = None) -> dict:
+    from benchmarks.run import PAPER_ARCH
+    from repro.core import perf_model as pm
+
+    modes = {r["mode"] for r in new_runs}
+    runs = [r for r in doc["runs"] if r["mode"] not in modes]
+    base = {(r["net"], r["use_kernel"]): r["steps_per_s"]
+            for r in new_runs if r["workers"] == 1}
+    for r in new_runs:
+        b = base.get((r["net"], r["use_kernel"]))
+        r["speedup_vs_1"] = r["steps_per_s"] / b if b else float("nan")
+        r["model_speedup"] = pm.predict_speedup(PAPER_ARCH[r["net"]],
+                                                r["workers"])
+    runs.extend(new_runs)
+    runs.sort(key=lambda r: (r["net"], r["use_kernel"], r["mode"],
+                             r["workers"]))
+    doc["runs"] = runs
+    doc["timestamp"] = time.time()
+    if note:
+        doc["note"] = doc.get("note", "") + "; " + note
+
+    rows = [row for row in doc.get("rows", [])
+            if not any(f"/{m}/" in row["name"] for m in modes)]
+    for r in new_runs:
+        kind = "kernel" if r["use_kernel"] else "xla"
+        rows.append({
+            "name": f"scaling/{r['net']}/{r['mode']}/{kind}/N{r['workers']}",
+            "us_per_call": r["us_per_step"],
+            "derived": f"{r['steps_per_s']:.1f}steps_per_s_speedup="
+                       f"{r['speedup_vs_1']:.2f}x_model="
+                       f"{r['model_speedup']:.2f}x"})
+    doc["rows"] = rows
+    return doc
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("patch", help="JSON from benchmarks.scaling --modes ... "
+                                  "('-' reads stdin)")
+    ap.add_argument("--artifact", default=os.path.normpath(DEFAULT_ARTIFACT))
+    ap.add_argument("--note", default=None,
+                    help="appended to the artifact's note field")
+    args = ap.parse_args()
+
+    with open(args.artifact) as f:
+        doc = json.load(f)
+    if args.patch == "-":
+        new_runs = json.load(sys.stdin)["runs"]
+    else:
+        with open(args.patch) as f:
+            new_runs = json.load(f)["runs"]
+    if not new_runs:
+        sys.exit("patch contains no runs")
+    doc = merge(doc, new_runs, args.note)
+    with open(args.artifact, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"merged {len(new_runs)} rows "
+          f"(modes: {sorted({r['mode'] for r in new_runs})}) "
+          f"into {args.artifact}; total {len(doc['runs'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -376,20 +376,33 @@ def bench_staleness(quick=False):
     from repro.core import perf_model as pm
 
     runs = _run_grid_subprocess("benchmarks.staleness", quick)
-    base = {(r["net"], r["workers"]): r for r in runs if r["tau"] == 0}
-    base_n1 = {(r["net"], r["tau"]): r for r in runs if r["workers"] == 1}
+    # baselines are keyed WITHIN a layerwise flavour (τ=0 layerwise bsp is
+    # the layerwise rows' synchronous baseline); speedup_vs_batched then
+    # compares each layerwise row against its batched twin — the
+    # per-layer-exchange overlap column
+    lw = lambda r: bool(r.get("layerwise"))
+    base = {(r["net"], r["workers"], lw(r)): r for r in runs
+            if r["tau"] == 0}
+    base_n1 = {(r["net"], r["tau"], lw(r)): r for r in runs
+               if r["workers"] == 1}
+    batched = {(r["net"], r["tau"], r["workers"]): r for r in runs
+               if not lw(r)}
     for r in runs:
-        b = base.get((r["net"], r["workers"]))
-        b1 = base_n1.get((r["net"], r["tau"]))
+        b = base.get((r["net"], r["workers"], lw(r)))
+        b1 = base_n1.get((r["net"], r["tau"], lw(r)))
+        tw = batched.get((r["net"], r["tau"], r["workers"]))
         r["speedup_vs_tau0"] = (r["steps_per_s"] / b["steps_per_s"]
                                 if b else float("nan"))
         r["speedup_vs_n1"] = (r["steps_per_s"] / b1["steps_per_s"]
                               if b1 else float("nan"))
         r["error_delta_vs_tau0"] = (r["final_error"] - b["final_error"]
                                     if b else float("nan"))
+        r["speedup_vs_batched"] = (r["steps_per_s"] / tw["steps_per_s"]
+                                   if lw(r) and tw else float("nan"))
         r["model_speedup"] = pm.predict_speedup(PAPER_ARCH[r["net"]],
                                                 r["workers"])
-        row(f"staleness/{r['net']}/tau{r['tau']}/N{r['workers']}",
+        kind = "layerwise" if lw(r) else "batched"
+        row(f"staleness/{r['net']}/tau{r['tau']}/N{r['workers']}/{kind}",
             r["us_per_step"],
             f"{r['steps_per_s']:.1f}steps_per_s_err={r['final_error']:.4f}"
             f"_derr={r['error_delta_vs_tau0']:+.4f}"

@@ -116,7 +116,14 @@ def main():
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: chaos-small, workers {1,4}, kernels "
                          "off, one measured superstep per mode")
+    ap.add_argument("--modes", default="bsp,chaos,localsgd",
+                    help="comma-separated sync-mode subset — re-measure "
+                         "only some BENCH_scaling rows (e.g. --modes chaos "
+                         "after a sync-engine change), then merge the "
+                         "stdout JSON into the artifact with "
+                         "benchmarks/merge_scaling.py")
     args = ap.parse_args()
+    modes = tuple(m for m in args.modes.split(",") if m)
 
     if args.quick:
         nets = ["chaos-small"]
@@ -153,7 +160,7 @@ def main():
     runs = []
     for net in nets:
         for use_kernel in kernel_modes:
-            for mode in ("bsp", "chaos", "localsgd"):
+            for mode in modes:
                 for n in worker_counts:
                     m = 1 if args.quick else net_measured[net]
                     if use_kernel:

@@ -10,6 +10,16 @@ updates, so the artifact holds the error delta vs the τ=0 (≡ bsp) cell
 next to the throughput, plus the Listing-2 performance-model speedup
 prediction for the same worker count.
 
+The **layerwise column** (``layerwise: true`` rows, τ ∈ {0, 1} × every
+worker count): the same cells through the ParamBuckets per-bucket exchange
+path (``--layerwise``) — each bucket runs its own ``gathered_shard_mean``
+and update in reverse-production order instead of one stacked whole-tree
+reduction, the paper's per-layer exchange granularity.  ``run.py`` attaches
+``speedup_vs_batched`` (layerwise vs its batched twin) so the
+per-layer-exchange overlap is a first-class column; layerwise τ=0 bsp is
+bit-exact to batched bsp, so its error column doubles as a correctness
+check.
+
 τ=0 resolves to the bsp strategy object itself (train/sync.py), so its
 cells ARE the synchronous baseline.  Must run with enough visible devices
 for the largest worker count — the parent (``benchmarks/run.py --only
@@ -74,7 +84,7 @@ def final_error(cfg, state, imgs, labels, stacked: bool) -> dict:
 
 
 def run_cell(net: str, tau: int, n_workers: int, train_steps: int,
-             lr: float) -> dict:
+             lr: float, layerwise: bool = False) -> dict:
     import repro.configs as C
     from repro.core.chaos import SyncConfig
     from repro.optim import sgd
@@ -83,7 +93,8 @@ def run_cell(net: str, tau: int, n_workers: int, train_steps: int,
     from benchmarks.scaling import build_worker_cell, timed_supersteps
 
     cfg = C.get(net)
-    sync = SyncConfig("chaos", staleness=tau, axis_name="workers")
+    sync = SyncConfig("chaos", staleness=tau, axis_name="workers",
+                      layerwise=layerwise)
     stacked = get_strategy(sync).stacked_state
     opt = sgd(lambda s: lr)
     worker, mesh, pipe, super_fn, state, (imgs, labels) = build_worker_cell(
@@ -95,6 +106,7 @@ def run_cell(net: str, tau: int, n_workers: int, train_steps: int,
         super_fn, state, pipe, mesh, worker, train_steps // SUPERSTEP - 1)
     cell = {
         "net": net, "tau": tau, "workers": n_workers,
+        "layerwise": layerwise,
         "superstep": SUPERSTEP, "batch": BATCH,
         "logical_shards": worker.logical_shards,
         "train_steps": train_steps, "lr": lr, "stacked_state": stacked,
@@ -116,11 +128,20 @@ def main():
         taus = [0, 2]
         worker_counts = [4]
         train_steps = {"chaos-small": 64, "chaos-medium": 32}
+        # CI layerwise cell: one per-bucket-exchange point next to the
+        # batched grid (uploaded with the quick artifact)
+        layerwise_cells = {("chaos-small", 0, 4)}
     else:
         nets = ["chaos-small", "chaos-medium", "chaos-large"]
         taus = [0, 1, 2, 4]
         worker_counts = [1, 4, 8]
         train_steps = dict(TRAIN_STEPS)
+        # the layerwise column (per-bucket exchange + update during
+        # backprop): τ ∈ {0, 1} are the canonical overlap cells — bsp-exact
+        # per-bucket collectives and stale per-bucket chaos — measured at
+        # every worker count next to their batched twins
+        layerwise_cells = {(net, tau, n) for net in nets for tau in (0, 1)
+                           for n in worker_counts}
 
     n_dev = len(jax.devices())
     if max(worker_counts) > n_dev:
@@ -133,12 +154,17 @@ def main():
     for net in nets:
         for n in worker_counts:
             for tau in taus:
-                r = run_cell(net, tau, n, train_steps[net], TRAIN_LR[net])
-                runs.append(r)
-                print(f"# {net} tau={tau} N={n}: "
-                      f"{r['steps_per_s']:.2f} steps/s "
-                      f"err={r['final_error']:.4f}",
-                      file=sys.stderr, flush=True)
+                for layerwise in (False, True):
+                    if layerwise and (net, tau, n) not in layerwise_cells:
+                        continue
+                    r = run_cell(net, tau, n, train_steps[net],
+                                 TRAIN_LR[net], layerwise=layerwise)
+                    runs.append(r)
+                    print(f"# {net} tau={tau} N={n} "
+                          f"lw={int(layerwise)}: "
+                          f"{r['steps_per_s']:.2f} steps/s "
+                          f"err={r['final_error']:.4f}",
+                          file=sys.stderr, flush=True)
     json.dump({"runs": runs}, sys.stdout)
     print(flush=True)
 

@@ -108,8 +108,17 @@ def staleness_curves(path=None):
         return
     print("  (error columns are hardware-independent; steps/s on forced "
           "host\n   devices shares one CPU — see the artifact's note)")
+    lw_runs = [r for r in runs if r.get("layerwise")]
+    if lw_runs:
+        print("  layerwise (per-bucket exchange, DESIGN.md §6) rows:")
+        for r in lw_runs:
+            s = r.get("speedup_vs_batched", float("nan"))
+            print(f"    {r['net']:>12s} tau={r['tau']} N={r['workers']}: "
+                  f"err={r['final_error']:.3f} "
+                  f"{r['steps_per_s']:.1f} steps/s ({s:.2f}x batched)")
     for net in ("chaos-small", "chaos-medium", "chaos-large"):
-        net_runs = [r for r in runs if r["net"] == net]
+        net_runs = [r for r in runs
+                    if r["net"] == net and not r.get("layerwise")]
         if not net_runs:
             continue
         taus = sorted({r["tau"] for r in net_runs})

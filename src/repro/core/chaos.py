@@ -63,15 +63,26 @@ class SyncConfig:
     #: construction (train/sync.py).  τ=1 on the pjit path reproduces the
     #: historical staleness-1 delayed exchange unchanged.
     staleness: int = 1
-    #: per-layer non-instant updates during backprop (the paper's §3 rule:
+    #: per-bucket non-instant updates during backprop (the paper's §3 rule:
     #: apply dW_l as soon as layer l's gradient is produced, in reverse
-    #: layer order inside the step) — CNN family + stateless SGD only.
+    #: production order inside the step) — any model family via its
+    #: ``bucket_spec()`` (CNN gets the true per-layer VJP tape), any
+    #: optimizer via per-bucket state slicing, both execution paths
+    #: (DESIGN.md §6).
     layerwise: bool = False
+    #: dtype of the chaos(τ>=1) staleness-ring slots; ``None`` = param
+    #: dtype.  ``"bfloat16"`` reuses the compression cast to halve the
+    #: τ × params ring memory (exchange values are quantised on write and
+    #: upcast to float32 on apply — the error is O(1 ulp bf16) per applied
+    #: exchange, NOT accumulated: each slot is overwritten, not re-added).
+    ring_dtype: Optional[str] = None
 
     def __post_init__(self):
         if self.staleness < 0:
             raise ValueError(
                 f"staleness must be >= 0, got {self.staleness}")
+        if self.ring_dtype is not None:
+            jnp.dtype(self.ring_dtype)  # fail fast on an unknown dtype name
 
 
 def zeros_like_f32(tree):
@@ -141,11 +152,17 @@ def gathered_shard_mean(tree, axis_name: str, n_workers: int,
     which is what makes bsp/chaos updates (and their checkpoints) bit-exact
     across worker counts (tests/test_worker_scaling.py)."""
     if n_workers > 1:
+        # gather in the *native* dtype: with per-shard bf16 compression the
+        # collective moves half the bytes, and the fixed-shape reduction
+        # below upcasts before summing
         tree = jax.tree.map(
             lambda x: jax.lax.all_gather(x, axis_name, axis=0, tiled=True),
             tree)
     inv = 1.0 / n_shards
-    return jax.tree.map(lambda x: jnp.sum(x, axis=0) * inv, tree)
+    # accumulate in f32 regardless of wire dtype (identity for f32 inputs,
+    # so the uncompressed path's bit-exactness contract is untouched)
+    return jax.tree.map(
+        lambda x: jnp.sum(x.astype(jnp.float32), axis=0) * inv, tree)
 
 
 def replicate_for_workers(tree, n: int):

@@ -147,6 +147,33 @@ class ArchConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class ParamBucket:
+    """One ordered, disjoint slice of a model's parameter tree (DESIGN.md §6).
+
+    Every model family exposes ``bucket_spec()`` (``models/api.py``): an
+    ordered tuple of buckets whose ``keys`` — top-level param-tree keys —
+    form an exact disjoint cover of the tree (property-tested for every
+    registered family).  Buckets are the granularity at which gradients are
+    exchanged (``SyncStrategy.bucket_exchange``), compressed (per-bucket
+    error-feedback residual slices), and applied (per-bucket optimizer-state
+    slicing, ``Optimizer.slice_state``): the paper's per-layer non-instant
+    update rule walks buckets in reverse-production order, so each bucket's
+    exchange + update chains to that bucket's gradient production instead of
+    a whole-tree barrier.
+
+    ``index`` is the bucket's position in *production* (forward) order; the
+    gradient tape yields buckets at ``index`` descending.
+    """
+    name: str
+    keys: Tuple[str, ...]
+    index: int
+
+    def view(self, tree: dict) -> dict:
+        """This bucket's slice of a params-shaped (top-level-keyed) tree."""
+        return {k: tree[k] for k in self.keys}
+
+
+@dataclasses.dataclass(frozen=True)
 class WorkerConfig:
     """CHAOS worker model: N per-device worker instances over a named mesh
     axis (the paper's Phi threads -> forced host devices, DESIGN.md §4).

@@ -192,13 +192,24 @@ def train(arch: str, steps: int, sync_mode: str = "bsp", batch: int = 8,
           log_every: int = 10, smoke: bool = True, superstep: int = 1,
           use_kernel: bool = False, workers: int | None = None,
           logical_shards: int = 8, staleness: int = 1,
-          layerwise: bool = False):
+          layerwise: bool = False, optim: str = "auto",
+          ring_dtype: str | None = None):
     if superstep < 1:
         raise ValueError(f"superstep must be >= 1, got {superstep}")
     cfg = C.smoke(arch) if smoke else C.get(arch)
     if use_kernel:
         cfg = dataclasses.replace(cfg, use_kernel=True)
-    optimizer = make_optimizer(cfg, base_lr=base_lr, total_steps=steps)
+    if layerwise and cfg.micro_batches > 1:
+        # the ONE genuinely unsupported layerwise combo: per-bucket updates
+        # cannot apply before later micro-batches' gradients exist
+        raise NotImplementedError(
+            "--layerwise does not compose with micro-batch accumulation "
+            f"(arch {arch!r} has micro_batches={cfg.micro_batches}); pick "
+            "an arch with micro_batches=1 or drop --layerwise.  Momentum/"
+            "adamw (--optim), --compress, and --workers>1 all DO compose "
+            "with --layerwise since the ParamBuckets redesign.")
+    optimizer = make_optimizer(cfg, base_lr=base_lr, total_steps=steps,
+                               kind=optim)
     put = None
     if workers is not None:
         # CHAOS worker-mesh route (DESIGN.md §4): the superstep scan runs
@@ -211,7 +222,7 @@ def train(arch: str, steps: int, sync_mode: str = "bsp", batch: int = 8,
         mesh = make_host_mesh(workers)
         sync = SyncConfig(mode=sync_mode, compress=compress,
                           axis_name=worker.axis, staleness=staleness,
-                          layerwise=layerwise)
+                          layerwise=layerwise, ring_dtype=ring_dtype)
         super_fn = make_worker_superstep(cfg, sync, worker, mesh, optimizer)
         state = init_worker_state(cfg, jax.random.key(0), sync, worker,
                                   optimizer)
@@ -221,7 +232,8 @@ def train(arch: str, steps: int, sync_mode: str = "bsp", batch: int = 8,
               f"({get_strategy(sync).checkpoint_layout()})", flush=True)
     else:
         sync = SyncConfig(mode=sync_mode, compress=compress,
-                          staleness=staleness, layerwise=layerwise)
+                          staleness=staleness, layerwise=layerwise,
+                          ring_dtype=ring_dtype)
         # K=1 is a length-1 scan: every run dispatches through the same scan
         # body, so mixing K across runs/resumes cannot change the numerics
         super_fn = jax.jit(make_superstep(cfg, sync, optimizer),
@@ -280,8 +292,19 @@ def main():
                     help="chaos staleness tau in steps; 0 degenerates "
                          "exactly to bsp (bit-exact, same checkpoints)")
     ap.add_argument("--layerwise", action="store_true",
-                    help="per-layer non-instant updates during backprop "
-                         "(paper update rule; CNN + plain SGD only)")
+                    help="per-bucket non-instant updates during backprop "
+                         "(paper update rule via the ParamBuckets tape; "
+                         "any family/optimizer, composes with --workers "
+                         "and --compress)")
+    ap.add_argument("--optim", default="auto",
+                    choices=["auto", "sgd", "momentum", "adamw"],
+                    help="optimizer override (auto = family default: CNN "
+                         "-> the paper's plain SGD, else adamw)")
+    ap.add_argument("--ring-dtype", default=None,
+                    choices=["bfloat16", "float32"],
+                    help="chaos staleness-ring slot dtype (default: param "
+                         "dtype); bfloat16 halves the tau x params ring "
+                         "memory via the compression cast")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--superstep", type=int, default=1,
@@ -310,7 +333,8 @@ def main():
                       superstep=args.superstep, use_kernel=args.use_kernel,
                       workers=args.workers,
                       logical_shards=args.logical_shards,
-                      staleness=args.staleness, layerwise=args.layerwise)
+                      staleness=args.staleness, layerwise=args.layerwise,
+                      optim=args.optim, ring_dtype=args.ring_dtype)
     print(f"[train] done: first-10 mean {np.mean(losses[:10]):.4f} -> "
           f"last-10 mean {np.mean(losses[-10:]):.4f}")
 

@@ -20,7 +20,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import ArchConfig
+from repro.core.types import ArchConfig, ParamBucket
 
 
 def _trace_shapes(cfg: ArchConfig):
@@ -73,6 +73,20 @@ def build_params(cfg: ArchConfig, f):
                 "b": f.array((cout,), None, mode="zeros"),
             }
     return params
+
+
+def bucket_spec(cfg: ArchConfig) -> tuple:
+    """ParamBuckets (DESIGN.md §6): one bucket per parameterised Table-2
+    layer, in forward (production) order — pool layers carry no params and
+    therefore no bucket.  The per-layer VJP tape yields these buckets at
+    ``index`` descending (reverse-production order, the paper's §3 walk)."""
+    buckets = []
+    for i, (kind, *_rest) in enumerate(_trace_shapes(cfg)):
+        if kind in ("conv", "fc"):
+            name = f"{kind}{i}"
+            buckets.append(ParamBucket(name=name, keys=(name,),
+                                       index=len(buckets)))
+    return tuple(buckets)
 
 
 def _use_kernel(cfg: ArchConfig, use_kernel):
@@ -160,33 +174,35 @@ def _layer_fns(cfg: ArchConfig, uk: bool):
     return out
 
 
-def loss_and_layerwise_update(params, batch, cfg: ArchConfig, apply_layer,
-                              use_kernel: bool | None = None):
-    """The paper's §3 update rule: non-instant per-layer weight updates
-    DURING back-propagation.
+def loss_and_bucket_grads(params, batch, cfg: ArchConfig, tape,
+                          use_kernel: bool | None = None):
+    """The paper's §3 update rule as a **bucket tape** (DESIGN.md §6):
+    non-instant per-bucket weight updates DURING back-propagation.
 
     Forward runs at the incoming ``params`` recording a per-layer VJP tape;
-    the backward walk then visits layers in reverse order and, the moment
-    layer l's gradient ``dW_l`` is produced, calls
-    ``apply_layer(name, params_l, dW_l) -> new_params_l`` — so in the
-    compiled graph each layer's update is chained to that layer's gradient
-    production, not to a whole-tree barrier ("without significant delay").
-    The same walk drives the XLA and the fused Pallas-kernel paths (each
-    layer closure carries its own custom-VJP kernels).
+    the backward walk then visits buckets in reverse-production order and,
+    the moment bucket b's gradient is produced, calls
+    ``tape(bucket, params_b, grads_b) -> new_params_b`` (``None`` leaves the
+    bucket untouched) — so in the compiled graph each bucket's exchange +
+    update is chained to that bucket's gradient production, not to a
+    whole-tree barrier ("without significant delay").  The same walk drives
+    the XLA and the fused Pallas-kernel paths (each layer closure carries
+    its own custom-VJP kernels).
 
     Returns ``(loss, metrics, new_params, grads)`` with ``grads`` the fresh
-    float32 per-layer gradients (for the sync strategy's exchange).
+    float32 per-bucket gradients (for the sync strategy's exchange).
     """
     uk = _use_kernel(cfg, use_kernel)
     x = batch["images"]
     labels = batch["labels"]
-    tape = []
+    buckets = {b.name: b for b in bucket_spec(cfg)}
+    layer_tape = []
     for name, fn in _layer_fns(cfg, uk):
         if name is None:
             x, vjp = jax.vjp(fn, x)
         else:
             x, vjp = jax.vjp(fn, params[name], x)
-        tape.append((name, vjp))
+        layer_tape.append((name, vjp))
 
     def loss_part(logits):
         logits = logits.astype(jnp.float32)
@@ -206,14 +222,16 @@ def loss_and_layerwise_update(params, batch, cfg: ArchConfig, apply_layer,
     (dy,) = vjp_loss(jnp.ones((), loss.dtype))
     new_params = dict(params)
     grads = {}
-    for name, vjp in reversed(tape):
+    for name, vjp in reversed(layer_tape):
         if name is None:
             (dy,) = vjp(dy)
             continue
         dp, dy = vjp(dy)
         dp = jax.tree.map(lambda t: t.astype(jnp.float32), dp)
         grads[name] = dp
-        new_params[name] = apply_layer(name, params[name], dp)
+        out = tape(buckets[name], {name: params[name]}, {name: dp})
+        if out is not None:
+            new_params.update(out)
     return loss, metrics, new_params, grads
 
 

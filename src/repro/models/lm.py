@@ -12,7 +12,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import ArchConfig
+from repro.core.types import ArchConfig, ParamBucket
 from repro.models import layers as L
 from repro.train.sharding import constrain
 
@@ -85,6 +85,23 @@ def _layer_params(cfg: ArchConfig, f, shape0=()):
     else:
         p["mlp"] = _mlp_params(cfg, f, shape0)
     return p
+
+
+def bucket_spec(cfg: ArchConfig) -> tuple:
+    """ParamBuckets (DESIGN.md §6) in production (forward) order: the token
+    embedding produces activations first, the scanned layer stack last
+    before the norm/output head.  The whole ``layers`` stack is ONE bucket —
+    per-layer params live stacked along a leading ``n_layers`` axis inside a
+    single leaf (``lax.scan`` layout), so the stack is the finest
+    exchange/update granularity the layout admits."""
+    order = ["embed"]
+    if cfg.family == "vlm":
+        order.append("patch_proj")
+    order += ["layers", "final_norm"]
+    if not cfg.tie_embeddings:
+        order.append("out_embed")
+    return tuple(ParamBucket(name=k, keys=(k,), index=i)
+                 for i, k in enumerate(order))
 
 
 def build_params(cfg: ArchConfig, f):

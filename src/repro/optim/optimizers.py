@@ -1,7 +1,24 @@
 """Pure-JAX optimizers (no optax in this container).
 
-``Optimizer`` bundles init/apply.  Moment dtype is configurable — bf16
-moments halve optimizer-state HBM for the 235B MoE config (DESIGN.md §4).
+``Optimizer`` bundles init/apply plus the bucket-granular surface the
+ParamBuckets API needs (DESIGN.md §6):
+
+- ``slice_state(state, keys)`` / ``merge_state(state, keys, bucket_state)``
+  slice and write back the optimizer state for one ``ParamBucket`` —
+  optimizer state is a dict of params-shaped trees (sgd-momentum ``{"mu"}``,
+  adamw ``{"m", "v"}``), so a bucket's slice is the bucket's top-level keys
+  of every such tree.  This is what lets the layerwise (per-bucket
+  non-instant) update path drive *stateful* optimizers, not just plain SGD.
+- ``pre_apply`` is the optimizer's **global** gradient transform (adamw's
+  global-norm clip) — the only part of an update that couples parameters
+  across buckets.  ``apply_raw`` is ``apply`` minus ``pre_apply``: per-leaf
+  arithmetic only, so applying it bucket-by-bucket is bit-identical to one
+  whole-tree ``apply`` given pre-transformed gradients.  ``pre_apply is
+  None`` means the optimizer has no global coupling and per-bucket updates
+  can fire the moment each bucket's gradient is produced.
+
+Moment dtype is configurable — bf16 moments halve optimizer-state HBM for
+the 235B MoE config (DESIGN.md §4).
 """
 from __future__ import annotations
 
@@ -12,10 +29,37 @@ import jax
 import jax.numpy as jnp
 
 
+def slice_state(state: dict, keys) -> dict:
+    """The bucket slice of an optimizer state: for every top-level moment
+    tree (params-shaped), take the bucket's param keys."""
+    return {k: {key: v[key] for key in keys} for k, v in state.items()}
+
+
+def merge_state(state: dict, keys, bucket_state: dict) -> dict:
+    """Write a bucket slice back into the full optimizer state."""
+    del keys
+    return {k: {**state[k], **bucket_state.get(k, {})} for k in state}
+
+
 @dataclasses.dataclass(frozen=True)
 class Optimizer:
     init: Callable
     apply: Callable  # (params, grads, state, step) -> (new_params, new_state)
+    #: global gradient transform (e.g. adamw's global-norm clip); None =
+    #: no cross-bucket coupling, per-bucket updates may apply instantly
+    pre_apply: Optional[Callable] = None
+    #: ``apply`` minus ``pre_apply`` (defaults to ``apply``): strictly
+    #: per-leaf, safe to call bucket-by-bucket
+    apply_raw: Optional[Callable] = None
+
+    def __post_init__(self):
+        if self.apply_raw is None:
+            object.__setattr__(self, "apply_raw", self.apply)
+
+    # bucket-granular state access (module-level functions as methods so a
+    # custom Optimizer can override them if its state is not params-shaped)
+    slice_state = staticmethod(slice_state)
+    merge_state = staticmethod(merge_state)
 
 
 def sgd(lr_fn: Callable, momentum: float = 0.0,
@@ -57,14 +101,17 @@ def adamw(lr_fn: Callable, b1: float = 0.9, b2: float = 0.95,
         z = lambda p: jnp.zeros(p.shape, mdt)
         return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
 
-    def apply(params, grads, state, step):
+    def pre_apply(grads):
+        # the ONE globally-coupled piece of the update: the clip scale is a
+        # function of the whole gradient tree's norm
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                          for g in jax.tree.leaves(grads)) + 1e-12)
+        scale = jnp.minimum(1.0, grad_clip / gn)
+        return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+    def apply_raw(params, grads, state, step):
         lr = lr_fn(step)
         step_f = jnp.asarray(step, jnp.float32) + 1.0
-        if grad_clip is not None:
-            gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
-                              for g in jax.tree.leaves(grads)) + 1e-12)
-            scale = jnp.minimum(1.0, grad_clip / gn)
-            grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
         bc1 = 1.0 - jnp.power(b1, step_f)
         bc2 = 1.0 - jnp.power(b2, step_f)
 
@@ -88,4 +135,11 @@ def adamw(lr_fn: Callable, b1: float = 0.9, b2: float = 0.95,
         new_v = tdef.unflatten([o[2] for o in out])
         return new_params, {"m": new_m, "v": new_v}
 
-    return Optimizer(init, apply)
+    def apply(params, grads, state, step):
+        if grad_clip is not None:
+            grads = pre_apply(grads)
+        return apply_raw(params, grads, state, step)
+
+    return Optimizer(init, apply,
+                     pre_apply=pre_apply if grad_clip is not None else None,
+                     apply_raw=apply_raw)

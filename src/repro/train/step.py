@@ -31,14 +31,24 @@ from repro.train.sync import StepContext, get_strategy
 
 
 def make_optimizer(cfg: ArchConfig, base_lr: float = 3e-4,
-                   total_steps: int = 10_000):
+                   total_steps: int = 10_000, kind: str = "auto"):
+    """``kind``: "auto" (family default: CNN -> the paper's plain SGD,
+    everything else -> adamw), or an explicit "sgd" / "momentum" /
+    "adamw" override (driver ``--optim``)."""
     lr_fn = make_lr_fn(cfg.lr_schedule,
                        base_lr=1e-3 if cfg.family == "cnn" else base_lr,
                        steps_per_epoch=max(total_steps // 70, 1),
                        total_steps=total_steps)
-    if cfg.family == "cnn":
+    if kind == "auto":
+        kind = "sgd" if cfg.family == "cnn" else "adamw"
+    if kind == "sgd":
         return sgd(lr_fn)  # paper: plain SGD + decay schedule
-    return adamw(lr_fn, moment_dtype=cfg.opt_moment_dtype)
+    if kind == "momentum":
+        return sgd(lr_fn, momentum=0.9)
+    if kind == "adamw":
+        return adamw(lr_fn, moment_dtype=cfg.opt_moment_dtype)
+    raise ValueError(
+        f"unknown optimizer kind {kind!r}; choose auto|sgd|momentum|adamw")
 
 
 def init_train_state(cfg: ArchConfig, key, sync: SyncConfig,
@@ -134,7 +144,7 @@ def make_train_step(cfg: ArchConfig, sync: SyncConfig, optimizer=None):
     optimizer = optimizer or make_optimizer(cfg)
     strat = get_strategy(sync)
     if sync.layerwise:
-        return _make_layerwise_step(cfg, sync, strat, ops, optimizer)
+        return _make_bucket_step(cfg, sync, strat, ops, optimizer)
     ctx = StepContext(optimizer=optimizer, grad_fn=_make_grad_fn(cfg, ops))
 
     def step(state, batch):
@@ -143,41 +153,93 @@ def make_train_step(cfg: ArchConfig, sync: SyncConfig, optimizer=None):
     return step
 
 
-def _make_layerwise_step(cfg: ArchConfig, sync: SyncConfig, strat, ops,
-                         optimizer):
-    """Per-layer non-instant updates during backprop (paper §3: dW_l is
-    applied the moment layer l's gradient is produced, in reverse layer
-    order) — works through both the XLA and Pallas-kernel CNN paths, and
-    composes with the superstep scan unchanged."""
-    if cfg.family != "cnn":
-        raise NotImplementedError(
-            "sync.layerwise implements the paper's per-layer CNN update "
-            f"rule; family={cfg.family!r} has no layerwise backward walk")
+def _apply_bucket(optimizer, bucket, params, g_b, opt_state, step):
+    """One bucket's optimizer update with sliced state: returns
+    ``(new_params_b, new_opt_state)`` — ``apply_raw`` is strictly per-leaf,
+    so bucket-by-bucket application is bit-identical to one whole-tree
+    apply given the same (pre-transformed) gradients."""
+    st_b = optimizer.slice_state(opt_state, bucket.keys)
+    new_p_b, new_st = optimizer.apply_raw(bucket.view(params), g_b, st_b,
+                                          step)
+    return new_p_b, optimizer.merge_state(opt_state, bucket.keys, new_st)
+
+
+def _bucket_walk(spec, optimizer, exchange_bucket, params, opt_state, grads,
+                 step):
+    """Collect-then-walk flavour of the bucket tape (reverse-production
+    order): exchange then update each bucket.  Used where all bucket
+    gradients exist before the walk — the worker mesh (per-shard gradients
+    come stacked out of ``lax.map``) and optimizers with a global
+    ``pre_apply`` transform (adamw's clip needs the whole exchanged tree).
+    Per-bucket exchange + update chaining is preserved either way."""
+    new_params = dict(params)
+    opt = opt_state
+    if optimizer.pre_apply is None:
+        for bucket in reversed(spec):
+            g_ex = exchange_bucket(bucket, bucket.view(grads))
+            new_p_b, opt = _apply_bucket(optimizer, bucket, new_params,
+                                         g_ex, opt, step)
+            new_params.update(new_p_b)
+        return new_params, opt
+    exchanged = {}
+    for bucket in reversed(spec):
+        exchanged.update(exchange_bucket(bucket, bucket.view(grads)))
+    exchanged = optimizer.pre_apply(exchanged)
+    for bucket in reversed(spec):
+        new_p_b, opt = _apply_bucket(optimizer, bucket, new_params,
+                                     bucket.view(exchanged), opt, step)
+        new_params.update(new_p_b)
+    return new_params, opt
+
+
+def _make_bucket_step(cfg: ArchConfig, sync: SyncConfig, strat, ops,
+                      optimizer):
+    """Per-bucket non-instant updates during backprop (paper §3: dW_l is
+    applied the moment layer l's gradient is produced, in reverse
+    production order) — any model family via its ``bucket_spec()`` (the
+    CNN's walk is chained to each layer's VJP gradient production, through
+    both the XLA and Pallas-kernel paths), any optimizer via per-bucket
+    state slicing, and it composes with the superstep scan unchanged."""
     if cfg.micro_batches > 1:
         raise NotImplementedError(
-            "sync.layerwise does not compose with micro-batch accumulation")
-    if sync.compress:
-        raise NotImplementedError(
-            "sync.layerwise does not support gradient compression: the "
-            "per-layer walk applies raw layer gradients, so the "
-            "error-feedback residual would silently never update")
-    abstract = jax.eval_shape(ops.init, jax.random.key(0))
-    if jax.eval_shape(optimizer.init, abstract) != {}:
-        raise NotImplementedError(
-            "sync.layerwise applies each layer's update in isolation, which "
-            "requires a stateless optimizer (plain SGD, the paper's); got "
-            "one with per-parameter state")
-    from repro.models.cnn import loss_and_layerwise_update
+            "sync.layerwise does not compose with micro-batch accumulation: "
+            "per-bucket updates would apply before later micro-batches' "
+            "gradients exist; run with cfg.micro_batches=1 (or drop "
+            "--layerwise)")
+    spec = ops.bucket_spec()
     ctx = StepContext(optimizer=optimizer)
 
     def step(state, batch):
-        apply_layer, finish = strat.layer_apply(ctx, state["sync"],
-                                                state["step"])
-        loss, metrics, new_params, grads = loss_and_layerwise_update(
-            state["params"], batch, cfg, apply_layer)
+        exchange_bucket, finish = strat.bucket_exchange(ctx, state["sync"],
+                                                        state["step"])
+        if optimizer.pre_apply is None:
+            # true tape: each bucket's exchange + update fires inside the
+            # backward walk, the moment that bucket's gradient is produced
+            opt_box = [state["opt"]]
+
+            def on_bucket(bucket, p_b, g_b):
+                del p_b  # the walk's running params are in new_params
+                g_ex = exchange_bucket(bucket, g_b)
+                new_p_b, opt_box[0] = _apply_bucket(
+                    optimizer, bucket, state["params"], g_ex, opt_box[0],
+                    state["step"])
+                return new_p_b
+
+            loss, metrics, new_params, grads = ops.loss_and_grads(
+                state["params"], batch, tape=on_bucket)
+            new_opt = opt_box[0]
+        else:
+            # globally-coupled optimizer (adamw's whole-tree clip): produce
+            # the tape gradients, exchange per bucket, transform once, then
+            # walk the per-bucket updates in the same reverse order
+            loss, metrics, grads = ops.loss_and_grads(state["params"],
+                                                      batch)
+            new_params, new_opt = _bucket_walk(
+                spec, optimizer, exchange_bucket, state["params"],
+                state["opt"], grads, state["step"])
         new_sync = finish(grads)
         new_params = strat.boundary(ctx, new_params, state["step"])
-        new_state = {"params": new_params, "opt": state["opt"],
+        new_state = {"params": new_params, "opt": new_opt,
                      "sync": new_sync, "step": state["step"] + 1}
         return new_state, {**metrics, "loss": loss}
 
@@ -227,15 +289,6 @@ def make_worker_train_step(cfg: ArchConfig, sync: SyncConfig,
     """
     ops = get_ops(cfg)
     optimizer = optimizer or make_optimizer(cfg)
-    if sync.compress:
-        raise NotImplementedError(
-            "gradient compression is not supported on the worker-mesh path")
-    if sync.layerwise:
-        raise NotImplementedError(
-            "sync.layerwise is not supported on the worker-mesh path yet: "
-            "the fixed-shape gathered reduction runs on the stacked "
-            "micro-shard gradients, and applying it per layer would need "
-            "per-layer collectives (ROADMAP open item)")
     if cfg.micro_batches > 1:
         raise NotImplementedError(
             "cfg.micro_batches is not consulted on the worker-mesh path — "
@@ -262,18 +315,44 @@ def make_worker_train_step(cfg: ArchConfig, sync: SyncConfig,
                                 + x.shape[1:]), batch)
         return jax.lax.map(one, shards)
 
+    # local reductions accumulate in f32 like gathered_shard_mean (identity
+    # for the uncompressed f32 path; with per-shard bf16 compression the
+    # stacks arrive bf16 and must not sum in bf16)
     ctx = StepContext(
         optimizer=optimizer, grad_fn=shard_grads,
         combine=lambda t: gathered_shard_mean(t, axis, N, S),
         local_mean=lambda t: jax.tree.map(
-            lambda x: jnp.sum(x, 0) / s_local, t),
+            lambda x: jnp.sum(x.astype(jnp.float32), 0) / s_local, t),
         # sum * (1/S), NOT sum / S: gathered_shard_mean multiplies by the
         # reciprocal, and the hogwild own/remote decomposition must use the
         # same arithmetic so remote_now == 0 exactly when all shards are
         # local (N=1 chaos == bsp for ANY logical_shards, not just pow2)
         local_frac=lambda t: jax.tree.map(
-            lambda x: jnp.sum(x, 0) * (1.0 / S), t),
+            lambda x: jnp.sum(x.astype(jnp.float32), 0) * (1.0 / S), t),
         explicit_workers=True, axis=axis, n_workers=N)
+
+    if sync.layerwise:
+        # per-bucket collectives (ROADMAP item, closed by the ParamBuckets
+        # redesign): gradients come stacked out of the per-shard lax.map,
+        # then every bucket runs its own gathered_shard_mean + update in
+        # reverse-production order — finer comm/compute interleave than one
+        # stacked whole-tree reduction, same per-leaf arithmetic (bit-exact
+        # to the batched update for bsp, any N dividing logical_shards)
+        spec = ops.bucket_spec()
+
+        def bucket_step(state, batch):
+            exchange_bucket, finish = strat.bucket_exchange(
+                ctx, state["sync"], state["step"])
+            losses, metrics, grads = ctx.grad_fn(state["params"], batch)
+            new_params, new_opt = _bucket_walk(
+                spec, optimizer, exchange_bucket, state["params"],
+                state["opt"], grads, state["step"])
+            new_sync = finish(grads)
+            new_params = strat.boundary(ctx, new_params, state["step"])
+            return strat.finish_step(ctx, state, new_params, new_opt, new_sync,
+                                 losses, metrics)
+
+        return bucket_step
 
     def step(state, batch):
         return strat.step(ctx, state, batch)
@@ -288,12 +367,27 @@ def init_worker_state(cfg: ArchConfig, key, sync: SyncConfig,
     state — byte-for-byte the same checkpoint layout as a single-device
     run, which is what makes those checkpoints worker-count-invariant.
     Strategies whose workers genuinely diverge (localsgd, chaos τ>=1)
-    carry a leading (N, ...) worker axis."""
+    carry a leading (N, ...) worker axis.  Sync-state keys follow the
+    strategy's ``worker_sync_layout()``: "worker" leaves get the (N, ...)
+    axis, "shard" leaves (the compression residual) a (logical_shards, ...)
+    axis — worker-count-invariant like the gradients they correct."""
     from repro.core.chaos import replicate_for_workers
 
+    strat = get_strategy(sync)
     state = init_train_state(cfg, key, sync, optimizer)
-    if get_strategy(sync).stacked_state:
-        state = replicate_for_workers(state, worker.workers)
+    layout = strat.worker_sync_layout()
+    sync_state = {
+        k: (replicate_for_workers(v, worker.workers)
+            if layout.get(k) == "worker"
+            else replicate_for_workers(v, worker.logical_shards)
+            if layout.get(k) == "shard" else v)
+        for k, v in state["sync"].items()}
+    if strat.stacked_state:
+        state = {k: replicate_for_workers(v, worker.workers)
+                 for k, v in state.items() if k != "sync"}
+    else:
+        state = {k: v for k, v in state.items() if k != "sync"}
+    state["sync"] = sync_state
     return state
 
 
@@ -315,16 +409,35 @@ def make_worker_superstep(cfg: ArchConfig, sync: SyncConfig,
     step = make_worker_train_step(cfg, sync, worker, optimizer)
     strat = get_strategy(sync)
     stacked = strat.stacked_state
+    layout = strat.worker_sync_layout()
+
+    def _map_sync(sync_state, fn):
+        # "worker" keys squeeze/restack their leading worker axis at the
+        # shard_map boundary; "shard" keys (the per-micro-shard compression
+        # residual) arrive as this worker's (s_local, ...) slice and pass
+        # through — the per-shard stacking IS the in-step layout
+        return {k: (jax.tree.map(fn, v) if layout.get(k) == "worker" else v)
+                for k, v in sync_state.items()}
 
     def superstep(state, batches):
+        state = dict(state)
+        sync_state = state.pop("sync")
         if stacked:
             state = jax.tree.map(lambda x: x[0], state)
+        state["sync"] = _map_sync(sync_state, lambda x: x[0])
         state, metrics = jax.lax.scan(step, state, batches)
+        state = dict(state)
+        sync_state = state.pop("sync")
         if stacked:
             state = jax.tree.map(lambda x: x[None], state)
+        state["sync"] = _map_sync(sync_state, lambda x: x[None])
         return state, metrics
 
-    state_spec = strat.shard_view(worker)
+    base = strat.shard_view(worker)
+    sync_spec = {k: (P() if v == "replicated" else P(worker.axis))
+                 for k, v in layout.items()}
+    state_spec = {"params": base, "opt": base, "step": base,
+                  "sync": sync_spec}
     fn = shard_map(superstep, mesh=mesh,
                    in_specs=(state_spec, P(None, worker.axis)),
                    out_specs=(state_spec, P()),

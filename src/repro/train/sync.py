@@ -1,4 +1,4 @@
-"""Pluggable synchronization-strategy engine (DESIGN.md §5).
+"""Pluggable synchronization-strategy engine (DESIGN.md §5, §6).
 
 Every gradient-synchronization mode — how workers' gradients are combined,
 when parameter updates happen relative to backprop, what extra state rides
@@ -18,6 +18,11 @@ Protocol (one strategy instance per ``SyncConfig``):
                             identical, state mesh-replicated (worker-count-
                             invariant checkpoints); ``True`` = per-worker
                             state with a leading ``(N, ...)`` axis
+``worker_sync_layout()``    per-top-level-sync-key worker-mesh layout:
+                            ``"worker"`` (leading (N, ...) axis),
+                            ``"shard"`` (leading (logical_shards, ...) axis
+                            — worker-count-invariant; the compression
+                            residual), or ``"replicated"``
 ``shard_view(worker)``      the shard_map PartitionSpec implied by the above
 ``checkpoint_layout()``     human-readable layout contract for tooling
 ``combine_grads`` is supplied BY the execution path via ``StepContext``
@@ -26,9 +31,30 @@ Protocol (one strategy instance per ``SyncConfig``):
 ``step(ctx, state, batch)`` the full train-step body (apply_update included)
 ``boundary(ctx, params, step)``  end-of-step parameter hook (localsgd's
                             K-step average; identity elsewhere)
-``layer_apply(ctx, sync_state, step)``  per-layer update hooks for the
-                            layerwise (non-instant-updates-during-backprop)
-                            CNN path (``models/cnn.py``)
+``finish_step(ctx, state, new_params, new_opt, new_sync, losses, metrics)``
+                            packs the step result: metric reduction
+                            (``workers_identical`` strategies reduce with
+                            the same fixed-shape mean as the gradients so
+                            logged losses are worker-count-invariant;
+                            diverging strategies local-mean + pmean) and
+                            TrainState assembly.  Step builders that
+                            compose their own step bodies (the worker-mesh
+                            layerwise bucket walk) end with this hook.
+``bucket_exchange(ctx, sync_state, step)``  the per-bucket exchange hook
+                            for the layerwise (non-instant per-bucket
+                            updates during backprop) path: returns
+                            ``(exchange_bucket, finish)`` where
+                            ``exchange_bucket(bucket, grads_b)`` — called
+                            in reverse-production order the moment bucket
+                            b's gradient exists — returns the gradient
+                            bucket the optimizer should apply, and
+                            ``finish(grads)`` returns the new sync state.
+                            Compression slices its error-feedback residual
+                            per bucket; chaos reads/writes its ring per
+                            bucket; on the worker mesh every bucket runs
+                            its OWN ``gathered_shard_mean`` (finer
+                            comm/compute overlap than one stacked
+                            reduction).
 
 Registered strategies:
 
@@ -123,12 +149,14 @@ class StepContext:
 # gradient computation between scan trip counts and breaks the
 # K-grouping bit-exactness contract by 1 ulp (tests/test_sync_strategies
 # pins scan-vs-individual bit-exactness for τ ∈ {2, 4}).  τ=1 degenerates
-# to exactly the historical single prev-grad buffer.
+# to exactly the historical single prev-grad buffer.  ``dtype`` overrides
+# the slot dtype (``SyncConfig.ring_dtype``: a bf16 ring halves the
+# τ × params ring memory; writes quantise, reads upcast).
 # ---------------------------------------------------------------------------
-def init_ring(params, tau: int) -> dict:
-    return {f"h{i}": jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype),
-                                  params)
-            for i in range(tau)}
+def init_ring(params, tau: int, dtype=None) -> dict:
+    return {f"h{i}": jax.tree.map(
+        lambda p: jnp.zeros(p.shape, dtype or p.dtype), params)
+        for i in range(tau)}
 
 
 def ring_read(hist, step, tau: int):
@@ -179,6 +207,15 @@ class BspStrategy:
             return {"residual": pspecs}
         return {}
 
+    def worker_sync_layout(self) -> dict:
+        """Worker-mesh layout per top-level sync-state key.  The
+        compression residual is SHARD-stacked (leading (logical_shards, ...)
+        axis, each worker holding its contiguous slice): quantisation error
+        is carried per micro-shard, so the whole compressed exchange — and
+        its checkpointed residual — is bit-identical for every worker count
+        dividing logical_shards, exactly like the gradients themselves."""
+        return {"residual": "shard"} if self.sync.compress else {}
+
     def shard_view(self, worker) -> P:
         return P(worker.axis) if self.stacked_state else P()
 
@@ -188,15 +225,22 @@ class BspStrategy:
                 "replicated (worker-count-invariant checkpoints)")
 
     # -- shared pieces --------------------------------------------------
-    def _maybe_compress(self, grads, sync_state):
+    def _maybe_compress(self, ctx: StepContext, grads, sync_state):
+        """bf16-quantise the exchanged gradients with error feedback.  On
+        the worker mesh the quantised values stay bf16 so the all_gather
+        moves half the bytes (``gathered_shard_mean`` upcasts before its
+        fixed-shape sum); on the pjit path they are upcast immediately —
+        the collective is implicit there, and downstream arithmetic
+        (optimizer pre-transforms) historically ran in f32."""
         new_sync = dict(sync_state)
         if self.sync.compress:
             grads, new_sync["residual"] = compress_grads(
                 grads, sync_state["residual"])
-            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            if not ctx.explicit_workers:
+                grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
         return grads, new_sync
 
-    def _finish(self, ctx: StepContext, state, new_params, new_opt,
+    def finish_step(self, ctx: StepContext, state, new_params, new_opt,
                 new_sync, losses, metrics):
         packed = {**metrics, "loss": losses}
         if self.workers_identical:
@@ -220,29 +264,54 @@ class BspStrategy:
     # -- the step body ---------------------------------------------------
     def step(self, ctx: StepContext, state, batch):
         losses, metrics, grads = ctx.grad_fn(state["params"], batch)
-        grads, new_sync = self._maybe_compress(grads, state["sync"])
+        grads, new_sync = self._maybe_compress(ctx, grads, state["sync"])
         g = self._reduce(ctx, grads)
         new_params, new_opt = ctx.optimizer.apply(
             state["params"], g, state["opt"], state["step"])
         new_params = self.boundary(ctx, new_params, state["step"])
-        return self._finish(ctx, state, new_params, new_opt, new_sync,
+        return self.finish_step(ctx, state, new_params, new_opt, new_sync,
                             losses, metrics)
 
-    # -- layerwise hooks (models/cnn.py::loss_and_layerwise_update) ------
-    def layer_apply(self, ctx: StepContext, sync_state, step):
-        """Returns ``(apply_layer, finish)``: ``apply_layer(name, p_l, g_l)``
-        is called the moment layer l's gradient is produced (reverse layer
-        order) and returns the updated layer params; ``finish(grads)``
-        returns the new sync state given the full fresh-gradient tree."""
-        def apply_layer(name, p, g):
-            new_p, _ = ctx.optimizer.apply(p, ctx.combine(g), {}, step)
-            return new_p
+    # -- per-bucket exchange (the layerwise path, DESIGN.md §6) ----------
+    def bucket_exchange(self, ctx: StepContext, sync_state, step):
+        """Returns ``(exchange_bucket, finish)``: ``exchange_bucket(bucket,
+        grads_b)`` is called in reverse-production order the moment bucket
+        b's gradient exists and returns the exchanged gradient bucket the
+        optimizer should apply — each bucket runs its own reduction, so on
+        the worker mesh the per-bucket ``gathered_shard_mean`` collectives
+        interleave with the per-bucket updates instead of gating on one
+        stacked whole-tree reduction.  ``finish(grads)`` (full fresh-
+        gradient tree) returns the new sync state — compression residual
+        slices accumulate per bucket."""
+        residual_out: dict = {}
+
+        def exchange_bucket(bucket, g_b):
+            g_b = self._compress_bucket(ctx, bucket, g_b, sync_state,
+                                        residual_out)
+            return self._reduce(ctx, g_b)
 
         def finish(grads):
             del grads
-            return dict(sync_state)
+            return self._merge_residual(sync_state, residual_out)
 
-        return apply_layer, finish
+        return exchange_bucket, finish
+
+    def _compress_bucket(self, ctx: StepContext, bucket, g_b, sync_state,
+                         residual_out):
+        if not self.sync.compress:
+            return g_b
+        res_b = bucket.view(sync_state["residual"])
+        g_b, new_res = compress_grads(g_b, res_b)
+        residual_out.update(new_res)
+        if not ctx.explicit_workers:
+            g_b = jax.tree.map(lambda g: g.astype(jnp.float32), g_b)
+        return g_b
+
+    def _merge_residual(self, sync_state, residual_out):
+        new_sync = dict(sync_state)
+        if residual_out:
+            new_sync["residual"] = {**sync_state["residual"], **residual_out}
+        return new_sync
 
 
 @register
@@ -293,11 +362,17 @@ class ChaosStrategy(BspStrategy):
             return BspStrategy(self.sync)
         return self
 
+    def _ring_dtype(self):
+        return (jnp.dtype(self.sync.ring_dtype)
+                if self.sync.ring_dtype else None)
+
     def init_state(self, params) -> dict:
-        # ring slots in param dtype: gradients are produced in param dtype
-        # anyway and a τ-deep f32 copy of a large model would be the
-        # dominant sync-state cost
-        st = {"hist": init_ring(params, self.sync.staleness)}
+        # ring slots default to param dtype: gradients are produced in
+        # param dtype anyway and a τ-deep f32 copy of a large model would
+        # be the dominant sync-state cost; ``ring_dtype="bfloat16"``
+        # (reusing the compression cast) halves even that
+        st = {"hist": init_ring(params, self.sync.staleness,
+                                self._ring_dtype())}
         if self.sync.compress:
             st["residual"] = zeros_like_f32(params)
         return st
@@ -309,6 +384,12 @@ class ChaosStrategy(BspStrategy):
         if self.sync.compress:
             st["residual"] = pspecs
         return st
+
+    def worker_sync_layout(self) -> dict:
+        layout = {"hist": "worker"}
+        if self.sync.compress:
+            layout["residual"] = "shard"
+        return layout
 
     def step(self, ctx: StepContext, state, batch):
         if ctx.explicit_workers:
@@ -326,17 +407,21 @@ class ChaosStrategy(BspStrategy):
         new_params, new_opt = ctx.optimizer.apply(
             state["params"], stale, state["opt"], state["step"])
         losses, metrics, grads = ctx.grad_fn(new_params, batch)
-        grads, new_sync = self._maybe_compress(grads, state["sync"])
+        grads, new_sync = self._maybe_compress(ctx, grads, state["sync"])
         new_sync["hist"] = ring_write(hist, state["step"], tau,
                                       ctx.combine(grads))
-        return self._finish(ctx, state, new_params, new_opt, new_sync,
+        return self.finish_step(ctx, state, new_params, new_opt, new_sync,
                             losses, metrics)
 
     def _hogwild_step(self, ctx: StepContext, state, batch):
-        """Worker mesh: own term instant + remote terms τ steps stale."""
+        """Worker mesh: own term instant + remote terms τ steps stale.
+        With compression the per-shard quantised gradients feed BOTH the
+        instant own term and the gathered exchange, so the error-feedback
+        residual stays worker-count-invariant (shard-stacked)."""
         tau = self.sync.staleness
         hist = state["sync"]["hist"]
         losses, metrics, grads = ctx.grad_fn(state["params"], batch)
+        grads, new_sync = self._maybe_compress(ctx, grads, state["sync"])
         own = ctx.local_frac(grads)
         stale_remote = ring_read(hist, state["step"], tau)
         g = jax.tree.map(lambda o, s: o + s.astype(jnp.float32),
@@ -348,34 +433,46 @@ class ChaosStrategy(BspStrategy):
         # this step's update
         remote_now = jax.tree.map(lambda a, o: a - o, ctx.combine(grads),
                                   own)
-        new_sync = dict(state["sync"])
         new_sync["hist"] = ring_write(hist, state["step"], tau, remote_now)
-        return self._finish(ctx, state, new_params, new_opt, new_sync,
+        return self.finish_step(ctx, state, new_params, new_opt, new_sync,
                             losses, metrics)
 
-    def layer_apply(self, ctx: StepContext, sync_state, step):
+    def bucket_exchange(self, ctx: StepContext, sync_state, step):
         """Layerwise chaos (paper §3 order): the forward pass runs at the
-        pre-update weights; during backprop each layer's update applies the
-        τ-step-stale exchanged gradient the moment that layer's fresh
-        gradient exists, and the fresh gradients enter the ring for step
-        t+τ.  (The non-layerwise pjit chaos instead evaluates gradients at
-        the post-update weights — the overlap-friendly SPMD ordering; both
-        are staleness-τ members of the same family, DESIGN.md §5.)"""
+        pre-update weights; during backprop each bucket's update applies,
+        the moment that bucket's fresh gradient exists, the τ-step-stale
+        exchange — plus, on the worker mesh, the worker's own instant term
+        (the hogwild decomposition, per bucket) — and the fresh exchange
+        terms enter the ring for step t+τ bucket by bucket.  (The
+        non-layerwise pjit chaos instead evaluates gradients at the
+        post-update weights — the overlap-friendly SPMD ordering; both are
+        staleness-τ members of the same family, DESIGN.md §5.)"""
         tau = self.sync.staleness
         stale = ring_read(sync_state["hist"], step, tau)
+        residual_out: dict = {}
+        fresh: dict = {}
 
-        def apply_layer(name, p, g):
-            del g  # the stale exchange, not the fresh local grad, updates
-            new_p, _ = ctx.optimizer.apply(p, stale[name], {}, step)
-            return new_p
+        def exchange_bucket(bucket, g_b):
+            g_b = self._compress_bucket(ctx, bucket, g_b, sync_state,
+                                        residual_out)
+            stale_b = bucket.view(stale)
+            if ctx.explicit_workers:
+                own = ctx.local_frac(g_b)
+                fresh.update(jax.tree.map(
+                    lambda a, o: a - o, ctx.combine(g_b), own))
+                return jax.tree.map(
+                    lambda o, s: o + s.astype(jnp.float32), own, stale_b)
+            fresh.update(ctx.combine(g_b))
+            return stale_b
 
         def finish(grads):
-            new_sync = dict(sync_state)
+            del grads
+            new_sync = self._merge_residual(sync_state, residual_out)
             new_sync["hist"] = ring_write(sync_state["hist"], step, tau,
-                                          ctx.combine(grads))
+                                          fresh)
             return new_sync
 
-        return apply_layer, finish
+        return exchange_bucket, finish
 
 
 SyncStrategy = BspStrategy  # protocol root: every strategy subclasses it

@@ -1,0 +1,297 @@
+"""ParamBuckets API contracts (DESIGN.md §6).
+
+* ``bucket_spec()`` is an exact disjoint ordered cover of the param tree
+  for EVERY registered model family (hypothesis property over families ×
+  construction seeds — the spec must hold for any config the family
+  builds).
+* Bucket-tape gradients concatenate bit-exactly to ``loss_and_grads``:
+  the reverse-production walk yields every bucket exactly once, and
+  reassembling the per-bucket gradients reproduces the whole-tree gradient
+  bit-for-bit (CNN true VJP tape on both the XLA and Pallas-kernel paths;
+  generic walk for the token families).
+* Optimizer ``slice_state``/``merge_state`` round-trip: slicing every
+  bucket and merging back reproduces the state tree exactly.
+* Per-bucket compression: the layerwise error-feedback residual round-trips
+  bit-exactly against whole-tree ``compress_grads``.
+* ``SyncConfig.ring_dtype``: bf16 ring slots halve ring bytes; the first τ
+  steps stay exact no-ops (zeros are bf16-exact).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.core.chaos import SyncConfig, compress_grads
+from repro.models.api import get_ops, validate_bucket_spec
+from repro.optim import adamw, sgd
+from repro.train.step import init_train_state, make_optimizer, make_train_step
+from tests._hypothesis_compat import given, settings, strategies as st
+
+#: one representative arch per registered model family
+FAMILY_ARCHS = {
+    "dense": "qwen3-14b",
+    "mla": "minicpm3-4b",
+    "moe": "qwen3-moe-30b-a3b",
+    "vlm": "llava-next-34b",
+    "hybrid": "zamba2-1.2b",
+    "ssm": "rwkv6-1.6b",
+    "encdec": "whisper-small",
+    "cnn": "chaos-small",
+}
+
+
+def _batch(cfg, key, B=2, T=16):
+    if cfg.family == "cnn":
+        imgs = jax.random.uniform(key, (B, 29, 29, 1))
+        labels = jax.random.randint(key, (B,), 0, cfg.n_classes)
+        return {"images": imgs, "labels": labels}
+    tokens = jax.random.randint(key, (B, T), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, axis=1)}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            key, (B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            key, (B, cfg.enc_frames, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# exact disjoint cover, every family
+# ---------------------------------------------------------------------------
+@settings(max_examples=16, deadline=None)
+@given(family=st.sampled_from(sorted(FAMILY_ARCHS)),
+       tie=st.booleans())
+def test_bucket_spec_exact_disjoint_cover(family, tie):
+    cfg = C.smoke(FAMILY_ARCHS[family])
+    if cfg.family != "cnn":
+        cfg = dataclasses.replace(cfg, tie_embeddings=tie)
+    ops = get_ops(cfg)
+    spec = ops.bucket_spec()
+    abstract = ops.abstract_params()
+    validate_bucket_spec(spec, abstract)  # raises on overlap/miss/disorder
+    covered = [k for b in spec for k in b.keys]
+    assert sorted(covered) == sorted(abstract)
+    assert len(set(covered)) == len(covered)
+    # views reassemble the tree exactly
+    merged = {}
+    for b in spec:
+        merged.update(b.view(abstract))
+    assert jax.tree.structure(dict(merged)) == jax.tree.structure(
+        dict(abstract))
+
+
+def test_validate_bucket_spec_rejects_bad_specs():
+    from repro.core.types import ParamBucket
+    abstract = {"a": 0, "b": 0}
+    with pytest.raises(ValueError, match="misses"):
+        validate_bucket_spec((ParamBucket("a", ("a",), 0),), abstract)
+    with pytest.raises(ValueError, match="overlaps"):
+        validate_bucket_spec((ParamBucket("a", ("a",), 0),
+                              ParamBucket("x", ("a", "b"), 1)), abstract)
+    with pytest.raises(ValueError, match="unknown"):
+        validate_bucket_spec((ParamBucket("a", ("a", "z"), 0),), abstract)
+
+
+# ---------------------------------------------------------------------------
+# bucket tape == whole-tree gradients, bit-exact
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch,use_kernel", [
+    ("chaos-small", False), ("chaos-small", True), ("qwen3-14b", False),
+    ("whisper-small", False)])
+def test_bucket_tape_concatenates_bitexact_to_loss_and_grads(arch,
+                                                             use_kernel):
+    cfg = C.smoke(arch)
+    if use_kernel:
+        cfg = dataclasses.replace(cfg, use_kernel=True)
+    ops = get_ops(cfg)
+    params = ops.init(jax.random.key(0))
+    batch = _batch(cfg, jax.random.key(1))
+    spec = ops.bucket_spec()
+
+    loss_w, metrics_w, grads_w = jax.jit(ops.loss_and_grads)(params, batch)
+
+    # visit order + coverage: the tape yields every bucket exactly once in
+    # reverse-production order, and returning None leaves params untouched
+    seen = []
+    _, _, new_params, _ = ops.loss_and_grads(
+        params, batch, tape=lambda b, p, g: seen.append((b.name, g)))
+    assert [n for n, _ in seen] == [b.name for b in reversed(spec)]
+    concat = {}
+    for _, g_b in seen:
+        concat.update(g_b)
+    assert sorted(concat) == sorted(grads_w)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(new_params)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+    # bit-exactness: the tape-mode grads (assembled from the per-bucket
+    # walk) equal the whole-tree grads, comparing like with like (both
+    # jitted — jit-vs-eager fusion differs at 1 ulp on the kernel path)
+    @jax.jit
+    def taped(params, batch):
+        return ops.loss_and_grads(params, batch,
+                                  tape=lambda b, p, g: None)
+
+    loss_t, _, _, grads_t = taped(params, batch)
+    np.testing.assert_array_equal(np.asarray(loss_w, np.float32),
+                                  np.asarray(loss_t, np.float32))
+    for key in grads_w:
+        for a, b in zip(jax.tree.leaves(grads_t[key]),
+                        jax.tree.leaves(grads_w[key])):
+            np.testing.assert_array_equal(
+                np.asarray(a, np.float32), np.asarray(b, np.float32),
+                err_msg=f"{arch} bucket {key} kernel={use_kernel}")
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_cnn_tape_grads_bitexact_any_batch(seed):
+    """Hypothesis leg of the satellite: the CNN per-layer VJP tape grads
+    match one whole value_and_grad bit-for-bit on any batch."""
+    cfg = C.get("chaos-small")
+    ops = get_ops(cfg)
+    params = ops.init(jax.random.key(3))
+    batch = _batch(cfg, jax.random.key(seed), B=4)
+    loss_w, _, grads_w = jax.jit(ops.loss_and_grads)(params, batch)
+    loss_t, _, _, grads_t = jax.jit(
+        lambda p, b: ops.loss_and_grads(p, b, tape=lambda *_: None))(
+            params, batch)
+    np.testing.assert_array_equal(np.asarray(loss_w), np.asarray(loss_t))
+    for key in grads_w:
+        for a, b in zip(jax.tree.leaves(grads_t[key]),
+                        jax.tree.leaves(grads_w[key])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# optimizer bucket-state slicing
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("make_opt", [
+    lambda: sgd(lambda s: 0.1),
+    lambda: sgd(lambda s: 0.1, momentum=0.9),
+    lambda: adamw(lambda s: 1e-3),
+])
+def test_optimizer_slice_merge_roundtrip(make_opt):
+    cfg = C.get("chaos-small")
+    ops = get_ops(cfg)
+    params = ops.init(jax.random.key(0))
+    opt = make_opt()
+    state = opt.init(params)
+    rebuilt = state
+    for bucket in ops.bucket_spec():
+        sliced = opt.slice_state(state, bucket.keys)
+        assert sorted(sliced) == sorted(state)
+        for tree in sliced.values():
+            assert sorted(tree) == sorted(bucket.keys)
+        rebuilt = opt.merge_state(rebuilt, bucket.keys, sliced)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(rebuilt)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_adamw_pre_apply_split_matches_apply():
+    """apply == apply_raw ∘ pre_apply: the global clip is the ONLY coupled
+    piece, so per-bucket apply_raw after one pre_apply is the whole
+    update."""
+    cfg = C.get("chaos-small")
+    ops = get_ops(cfg)
+    params = ops.init(jax.random.key(0))
+    opt = adamw(lambda s: 1e-3)
+    state = opt.init(params)
+    _, _, grads = ops.loss_and_grads(params, _batch(cfg, jax.random.key(1)))
+    p1, s1 = opt.apply(params, grads, state, 0)
+    p2, s2 = opt.apply_raw(params, opt.pre_apply(grads), state, 0)
+    for a, b in zip(jax.tree.leaves((p1, s1)), jax.tree.leaves((p2, s2))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert sgd(lambda s: 0.1).pre_apply is None
+    assert adamw(lambda s: 1e-3, grad_clip=None).pre_apply is None
+
+
+# ---------------------------------------------------------------------------
+# per-bucket compression residual round-trip
+# ---------------------------------------------------------------------------
+def test_layerwise_compress_residual_roundtrip_per_bucket():
+    """The per-bucket error-feedback walk (bucket_exchange slicing the
+    residual bucket by bucket) merges back to EXACTLY the whole-tree
+    compress_grads result on the same gradients — per-leaf quantisation is
+    bucket-independent — and a real layerwise step carries it end-to-end."""
+    from repro.train.sync import StepContext, get_strategy
+
+    cfg = C.get("chaos-small")
+    ops = get_ops(cfg)
+    sync = SyncConfig("bsp", layerwise=True, compress=True)
+    opt = sgd(lambda s: 0.05)
+    state = init_train_state(cfg, jax.random.key(0), sync, opt)
+    batch = _batch(cfg, jax.random.key(1), B=8)
+    strat = get_strategy(sync)
+    ctx = StepContext(optimizer=opt)
+
+    @jax.jit
+    def both(params, batch, sync_state):
+        _, _, _, grads = ops.loss_and_grads(params, batch,
+                                            tape=lambda *_: None)
+        exchange_bucket, finish = strat.bucket_exchange(ctx, sync_state, 0)
+        for b in reversed(ops.bucket_spec()):
+            exchange_bucket(b, b.view(grads))
+        per_bucket = finish(grads)["residual"]
+        _, whole = compress_grads(grads, sync_state["residual"])
+        return per_bucket, whole
+
+    per_bucket, whole = both(state["params"], batch, state["sync"])
+    for a, b in zip(jax.tree.leaves(per_bucket), jax.tree.leaves(whole)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert any(np.any(np.asarray(l) != 0) for l in jax.tree.leaves(whole))
+
+    # end-to-end: the compiled layerwise step carries the same residual
+    # (cross-program comparison -> the repo's standard 1-ulp tolerance)
+    step = jax.jit(make_train_step(cfg, sync, opt))
+    new_state, _ = step(state, batch)
+    for a, b in zip(jax.tree.leaves(new_state["sync"]["residual"]),
+                    jax.tree.leaves(per_bucket)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# ring_dtype
+# ---------------------------------------------------------------------------
+def test_ring_dtype_bf16_halves_ring_and_stays_noop_exact():
+    cfg = C.get("chaos-small")
+    opt = sgd(lambda s: 0.05)
+    sync32 = SyncConfig("chaos", staleness=2)
+    sync16 = SyncConfig("chaos", staleness=2, ring_dtype="bfloat16")
+    s32 = init_train_state(cfg, jax.random.key(0), sync32, opt)
+    s16 = init_train_state(cfg, jax.random.key(0), sync16, opt)
+    bytes32 = sum(l.size * l.dtype.itemsize
+                  for l in jax.tree.leaves(s32["sync"]["hist"]))
+    bytes16 = sum(l.size * l.dtype.itemsize
+                  for l in jax.tree.leaves(s16["sync"]["hist"]))
+    assert bytes16 * 2 == bytes32
+    for slot in s16["sync"]["hist"].values():
+        assert all(l.dtype == jnp.bfloat16 for l in jax.tree.leaves(slot))
+
+    # first τ steps apply the zero ring — exact no-ops in any ring dtype
+    step = jax.jit(make_train_step(cfg, sync16, opt))
+    batch = _batch(cfg, jax.random.key(1), B=8)
+    p0 = jax.tree.map(np.asarray, s16["params"])
+    for _ in range(2):
+        s16, _ = step(s16, batch)
+        for a, b in zip(jax.tree.leaves(p0), jax.tree.leaves(s16["params"])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # step τ+1 applies the (bf16-quantised) step-1 exchange: close to the
+    # exact f32-ring update within bf16 tolerance
+    step32 = jax.jit(make_train_step(cfg, sync32, opt))
+    r32 = init_train_state(cfg, jax.random.key(0), sync32, opt)
+    for _ in range(3):
+        r32, _ = step32(r32, batch)
+    s16, _ = step(s16, batch)
+    for a, b in zip(jax.tree.leaves(s16["params"]),
+                    jax.tree.leaves(r32["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-3)
+
+
+def test_ring_dtype_unknown_name_rejected():
+    with pytest.raises(TypeError):
+        SyncConfig("chaos", staleness=1, ring_dtype="not-a-dtype")
