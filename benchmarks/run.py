@@ -417,6 +417,26 @@ def bench_staleness(quick=False):
 
 
 # ---------------------------------------------------------------------------
+# Elastic resize: membership-change latency + throughput recovery
+# (DESIGN.md §7; CI's preemption-injection smoke uploads this section)
+# ---------------------------------------------------------------------------
+def bench_elastic(quick=False):
+    runs = _run_grid_subprocess("benchmarks.elastic", quick)
+    for r in runs:
+        row(f"elastic/{r['label']}/{r['from']}to{r['to']}",
+            r["latency_s"] * 1e6,
+            f"path={r['path']}_first_superstep="
+            f"{r['first_superstep_s'] * 1e3:.0f}ms_steps_per_s="
+            f"{r['steps_per_s_before']:.1f}->{r['steps_per_s_after']:.1f}")
+    return {"runs": runs, "forced_devices": SCALING_DEVICES,
+            "note": "latency_s is the re-slot + rebuild cost from "
+                    "ResizeOutcome; the first post-resize superstep "
+                    "carries the recompile and is reported separately; "
+                    "forced host devices share one CPU, so steps_per_s "
+                    "validates recovery, not hardware scaling"}
+
+
+# ---------------------------------------------------------------------------
 # Roofline table from the dry-run results (deliverable g summary)
 # ---------------------------------------------------------------------------
 def bench_roofline(quick=False):
@@ -482,6 +502,7 @@ def main():
         "train": bench_train,
         "scaling": bench_scaling,
         "staleness": bench_staleness,
+        "elastic": bench_elastic,
         "roofline": bench_roofline,
         "serving": bench_serving,
     }

@@ -8,6 +8,19 @@
   back on a different topology (elastic scaling / failed-pod recovery).
 - Async save: optional background thread so the training loop is not
   blocked by I/O (the step's arrays are snapshotted to host first).
+- Payload validation: the manifest stamps the payload's byte length and
+  CRC32; ``restore`` verifies both before unpickling, so a torn/truncated
+  write (power loss after the rename, a lying filesystem) is DETECTED and
+  the manager falls back to the newest older checkpoint that validates
+  instead of crashing mid-restore.  Pre-checksum checkpoints (no ``crc32``
+  in the manifest) still restore — validation is skipped for them.
+- Transient-IO retry: payload reads are retried ``io_retries`` times with
+  bounded exponential backoff before a fallback/raise, so a blip on a
+  network filesystem does not abort a resume.
+- ``fault`` is an optional injector (``launch/faults.py``) whose hooks fire
+  after a checkpoint lands (torn-write simulation) and before each payload
+  read (transient-IO simulation) — the deterministic test surface for all
+  of the above.
 """
 from __future__ import annotations
 
@@ -15,6 +28,8 @@ import json
 import os
 import shutil
 import threading
+import time
+import zlib
 from typing import Any, Optional
 
 import jax
@@ -26,10 +41,21 @@ def _flatten(tree):
     return leaves, treedef
 
 
+class CheckpointCorrupt(Exception):
+    """A checkpoint directory failed validation (torn payload, bad CRC,
+    unreadable manifest).  Internal signal for the fallback walk; surfaced
+    only when the caller pinned the corrupt step explicitly."""
+
+
 class CheckpointManager:
-    def __init__(self, directory: str, keep_n: int = 3):
+    def __init__(self, directory: str, keep_n: int = 3,
+                 io_retries: int = 3, io_backoff: float = 0.05,
+                 fault=None):
         self.dir = directory
         self.keep_n = keep_n
+        self.io_retries = io_retries
+        self.io_backoff = io_backoff
+        self.fault = fault
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
 
@@ -65,15 +91,24 @@ class CheckpointManager:
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
-        np.savez(os.path.join(tmp, "arrays.npz"),
-                 **{f"a{i}": l for i, l in enumerate(host_leaves)})
+        payload = os.path.join(tmp, "arrays.npz")
+        np.savez(payload, **{f"a{i}": l for i, l in enumerate(host_leaves)})
+        with open(payload, "rb") as f:
+            raw = f.read()
+        # length + CRC32 stamp: restore re-derives both from the bytes it
+        # actually reads, so any truncation/bit-rot between here and there
+        # is detected before the payload is parsed
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump({"step": step, "n_leaves": len(host_leaves),
-                       "treedef": str(treedef)}, f)
+                       "treedef": str(treedef),
+                       "payload_bytes": len(raw),
+                       "crc32": zlib.crc32(raw)}, f)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.replace(tmp, final)
         self._gc()
+        if self.fault is not None:
+            self.fault.on_checkpoint_written(step, final)
 
     def _gc(self):
         steps = self.all_steps()
@@ -93,16 +128,94 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def _read_payload_bytes(self, path: str) -> bytes:
+        """Read the payload with bounded-backoff retry on transient IO
+        errors (network-fs blips; injected via ``fault``)."""
+        attempt = 0
+        while True:
+            try:
+                if self.fault is not None:
+                    self.fault.on_restore_read(path, attempt)
+                with open(path, "rb") as f:
+                    return f.read()
+            except FileNotFoundError:
+                raise  # not transient: the payload is gone, not slow
+            except OSError as e:
+                if attempt >= self.io_retries:
+                    raise
+                delay = self.io_backoff * (2 ** attempt)
+                print(f"[ckpt] transient IO error reading {path} "
+                      f"(attempt {attempt + 1}/{self.io_retries + 1}): "
+                      f"{e}; retrying in {delay:.2f}s", flush=True)
+                time.sleep(delay)
+                attempt += 1
+
+    def _load_validated(self, step: int):
+        """Load + validate one checkpoint dir; raises CheckpointCorrupt on
+        a torn payload / CRC mismatch / unreadable manifest."""
+        d = os.path.join(self.dir, f"step_{step:010d}")
+        payload = os.path.join(d, "arrays.npz")
+        manifest = os.path.join(d, "manifest.json")
+        try:
+            with open(manifest) as f:
+                meta = json.load(f)
+        except (OSError, ValueError) as e:
+            raise CheckpointCorrupt(
+                f"checkpoint step {step}: unreadable manifest ({e})")
+        try:
+            raw = self._read_payload_bytes(payload)
+        except FileNotFoundError as e:
+            raise CheckpointCorrupt(
+                f"checkpoint step {step}: payload missing ({e})")
+        want_len, want_crc = meta.get("payload_bytes"), meta.get("crc32")
+        if want_len is not None and len(raw) != want_len:
+            raise CheckpointCorrupt(
+                f"checkpoint step {step}: torn payload — arrays.npz is "
+                f"{len(raw)} bytes but the manifest stamped {want_len} "
+                f"(truncated write)")
+        if want_crc is not None and zlib.crc32(raw) != want_crc:
+            raise CheckpointCorrupt(
+                f"checkpoint step {step}: payload CRC mismatch "
+                f"(bit-rot or partial overwrite)")
+        import io
+        try:
+            return np.load(io.BytesIO(raw))
+        except Exception as e:
+            raise CheckpointCorrupt(
+                f"checkpoint step {step}: payload unparseable ({e})")
+
     def restore(self, like: Any, step: Optional[int] = None,
                 shardings: Any = None):
         """Restore into the structure of `like`.  If `shardings` is given
         (same tree structure), arrays are device_put with those shardings —
-        this is what makes restore topology-independent."""
-        step = self.latest_step() if step is None else step
-        if step is None:
+        this is what makes restore topology-independent.
+
+        With ``step=None`` (auto), checkpoints are tried newest-first:
+        a candidate that fails payload validation (torn write) is skipped
+        with a warning and the next older one is used — a crash never
+        follows from a corrupt latest checkpoint.  An explicitly pinned
+        ``step`` that fails validation raises instead."""
+        pinned = step is not None
+        candidates = [step] if pinned else list(reversed(self.all_steps()))
+        if not candidates:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        path = os.path.join(self.dir, f"step_{step:010d}", "arrays.npz")
-        data = np.load(path)
+        data, got_step, last_err = None, None, None
+        for s in candidates:
+            try:
+                data = self._load_validated(s)
+                got_step = s
+                break
+            except CheckpointCorrupt as e:
+                last_err = e
+                if pinned:
+                    raise ValueError(str(e)) from e
+                print(f"[ckpt] {e}; falling back to the previous "
+                      f"checkpoint", flush=True)
+        if data is None:
+            raise FileNotFoundError(
+                f"no valid checkpoint in {self.dir}: every candidate "
+                f"failed validation (last: {last_err})")
+        step = got_step
         leaves_like, treedef = _flatten(like)
         n = len(leaves_like)
         arrs = [data[f"a{i}"] for i in range(n)]

@@ -201,6 +201,23 @@ class WorkerConfig:
     def shards_per_worker(self) -> int:
         return self.logical_shards // self.workers
 
+    def resized(self, workers: int) -> "WorkerConfig":
+        """This config at a new worker count (elastic resize, DESIGN.md §7).
+        ``logical_shards`` is deliberately carried over unchanged — it is
+        the invariant that keeps bsp/chaos gradients bit-exact across the
+        membership change; validation re-runs in ``__post_init__``."""
+        return dataclasses.replace(self, workers=workers)
+
+    def clamp_workers(self, requested: int) -> int:
+        """Largest valid worker count <= ``requested`` (>= 1): elastic
+        membership targets (a kill leaving N-1 workers, a grow event) must
+        still divide ``logical_shards``, so e.g. losing one of 4 workers
+        with 8 logical shards lands on N'=3 -> 2."""
+        for n in range(min(requested, self.logical_shards), 0, -1):
+            if self.logical_shards % n == 0:
+                return n
+        return 1
+
     def validate_batch(self, batch: int) -> None:
         if batch % self.logical_shards != 0:
             raise ValueError(

@@ -40,7 +40,9 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import queue
+import signal
 import statistics
 import sys
 import threading
@@ -55,6 +57,8 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.core.chaos import SyncConfig
 from repro.core.types import WorkerConfig
 from repro.data.pipeline import ImagePipeline, TokenPipeline
+from repro.launch.elastic import ResizeController
+from repro.launch.faults import FaultPlan
 from repro.launch.mesh import make_host_mesh
 from repro.train.step import (init_train_state, init_worker_state,
                               make_optimizer, make_superstep,
@@ -72,29 +76,47 @@ class StragglerWatchdog:
     steps, so the window shrinks to keep a roughly constant ~200-step
     horizon (min 8 observations) — and ``flagged`` is a bounded deque so a
     long-running job cannot leak memory through its own diagnostics.
+
+    The first ``warmup`` observations are discarded entirely: they carry
+    jit-compile time (and the first donated-buffer re-trace, so TWO of
+    them), which would both poison the window's variance (a multi-second
+    outlier hides any real straggler for the window's whole lifetime) and
+    be flagged as a phantom straggler itself.  The driver builds a FRESH
+    watchdog after an elastic resize for the same reason — a new mesh
+    recompiles and retimes.
     """
 
     def __init__(self, window: int | None = None, z: float = 3.0,
-                 superstep: int = 1, max_flags: int = 64):
+                 superstep: int = 1, max_flags: int = 64, warmup: int = 2):
         if window is None:
             window = max(8, 200 // max(superstep, 1))
         self.times: deque = deque(maxlen=window)
         self.window = window
         self.z = z
         self.flagged: deque = deque(maxlen=max_flags)
+        self.warmup = warmup
 
-    def observe(self, step: int, dt: float):
+    def observe(self, step: int, dt: float) -> bool:
+        """Record one superstep wall time; True when it was flagged as a
+        straggler (the driver's --evict-stragglers feeds this verdict to
+        the elastic ResizeController as a membership event)."""
+        if self.warmup > 0:
+            self.warmup -= 1
+            return False
+        straggled = False
         # need a filled-enough window before z-scoring; never require more
         # samples than the window can hold (large K shrinks it below 10)
         if len(self.times) >= min(10, self.times.maxlen):
             mu = statistics.fmean(self.times)
             sd = statistics.pstdev(self.times) or 1e-9
             if dt > mu + self.z * sd:
+                straggled = True
                 self.flagged.append((step, dt, mu))
                 print(f"[watchdog] superstep ending at {step} straggled: "
                       f"{dt * 1e3:.1f}ms vs mean {mu * 1e3:.1f}ms",
                       flush=True)
         self.times.append(dt)
+        return straggled
 
 
 def make_pipeline(cfg, batch: int, seq: int, seed: int = 0):
@@ -153,6 +175,7 @@ class PrefetchFeed:
     def __init__(self, pipe, chunks, depth: int = 2, put=None):
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._error: BaseException | None = None
+        self._stopped = False
         self._put = put or (lambda p, s, k: jax.device_put(
             p.superstep_at(s, k)))
         self._thread = threading.Thread(
@@ -162,12 +185,26 @@ class PrefetchFeed:
     def _produce(self, pipe, chunks):
         try:
             for start, k in chunks:
+                if self._stopped:
+                    return
                 batch = self._put(pipe, start, k)
                 self._q.put((start, k, batch))
         except BaseException as e:  # surface in the consumer, never hang it
             self._error = e
         finally:
             self._q.put(None)
+
+    def stop(self):
+        """Abandon the feed mid-schedule (elastic resize rebuilds it for
+        the new mesh): drain the queue so a producer blocked in ``put``
+        wakes up, sees the flag, and exits."""
+        self._stopped = True
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=10)
 
     def __iter__(self):
         while True:
@@ -193,9 +230,12 @@ def train(arch: str, steps: int, sync_mode: str = "bsp", batch: int = 8,
           use_kernel: bool = False, workers: int | None = None,
           logical_shards: int = 8, staleness: int = 1,
           layerwise: bool = False, optim: str = "auto",
-          ring_dtype: str | None = None):
+          ring_dtype: str | None = None, inject: str | None = None,
+          inject_seed: int = 0, metrics_out: str | None = None,
+          evict_stragglers: bool = False):
     if superstep < 1:
         raise ValueError(f"superstep must be >= 1, got {superstep}")
+    plan = FaultPlan.from_spec(inject, seed=inject_seed)
     cfg = C.smoke(arch) if smoke else C.get(arch)
     if use_kernel:
         cfg = dataclasses.replace(cfg, use_kernel=True)
@@ -211,6 +251,7 @@ def train(arch: str, steps: int, sync_mode: str = "bsp", batch: int = 8,
     optimizer = make_optimizer(cfg, base_lr=base_lr, total_steps=steps,
                                kind=optim)
     put = None
+    controller = None
     if workers is not None:
         # CHAOS worker-mesh route (DESIGN.md §4): the superstep scan runs
         # inside shard_map over a 1-D worker mesh; each worker consumes its
@@ -227,10 +268,21 @@ def train(arch: str, steps: int, sync_mode: str = "bsp", batch: int = 8,
         state = init_worker_state(cfg, jax.random.key(0), sync, worker,
                                   optimizer)
         put = lambda p, s, k: put_worker_sharded(p, s, k, mesh, worker)
+        controller = ResizeController(cfg, sync, optimizer, worker, mesh,
+                                      fault=plan)
+        try:  # SIGUSR1 = the scheduler's preemption warning: shed a worker
+            signal.signal(signal.SIGUSR1, lambda *_: controller.request(
+                controller.worker.workers - 1, "SIGUSR1 preemption warning"))
+        except ValueError:
+            pass  # not the main thread (in-process harness) — skip the hook
         print(f"[train] worker mesh: {workers} worker(s) x "
               f"{worker.shards_per_worker} shard(s), sync={sync_mode} "
               f"({get_strategy(sync).checkpoint_layout()})", flush=True)
     else:
+        if plan is not None and any(e.kind == "kill" for e in plan.events):
+            print("[train] NOTE: --inject kill@... is a worker-membership "
+                  "event; without --workers there is no mesh to resize, so "
+                  "kill events are ignored on this route", flush=True)
         sync = SyncConfig(mode=sync_mode, compress=compress,
                           staleness=staleness, layerwise=layerwise,
                           ring_dtype=ring_dtype)
@@ -244,41 +296,101 @@ def train(arch: str, steps: int, sync_mode: str = "bsp", batch: int = 8,
     start = 0
     mgr = None
     if ckpt_dir:
-        mgr = CheckpointManager(ckpt_dir, keep_n=3)
+        mgr = CheckpointManager(ckpt_dir, keep_n=3, fault=plan)
+        if controller is not None:
+            controller.ckpt_mgr = mgr  # the resize ladder's restore rung
         if mgr.latest_step() is not None:
             state, start = mgr.restore(state)
             print(f"[train] resumed from step {start}", flush=True)
 
     watchdog = StragglerWatchdog(superstep=superstep)
-    losses = []
+    # losses keyed by step: an elastic ckpt-restore rung may REPLAY a few
+    # steps, and replayed entries overwrite their originals (bit-exactly
+    # for worker-count-invariant strategies) instead of duplicating
+    loss_map: dict[int, float] = {}
     saved_at = None
-    feed = PrefetchFeed(pipe, superstep_schedule(start, steps, superstep),
-                        put=put)
-    for s0, k, dev_batch in feed:
-        t0 = time.time()
-        state, metrics = super_fn(state, dev_batch)
-        # ONE host sync per K steps: the (K,) loss vector
-        loss_vec = np.asarray(metrics["loss"])
-        losses.extend(float(x) for x in loss_vec)
-        end = s0 + k
-        watchdog.observe(end, time.time() - t0)
-        for t in range(s0, end):
-            if t % log_every == 0:
-                print(f"[train {arch} sync={sync_mode}] step {t} "
-                      f"loss={loss_vec[t - s0]:.4f}", flush=True)
-        if mgr and end // ckpt_every > s0 // ckpt_every:
-            mgr.save(end, state, blocking=False)
-            saved_at = end
-        if die_at_step is not None and end >= die_at_step:
-            if mgr:
-                mgr.wait()
-            print(f"[train] simulated preemption at step {end}", flush=True)
-            sys.exit(17)
+    next_start = start
+    while next_start < steps:
+        feed = PrefetchFeed(pipe,
+                            superstep_schedule(next_start, steps, superstep),
+                            put=put)
+        resize_request = None
+        for s0, k, dev_batch in feed:
+            t0 = time.time()
+            state, metrics = super_fn(state, dev_batch)
+            # ONE host sync per K steps: the (K,) loss vector
+            loss_vec = np.asarray(metrics["loss"])
+            end = s0 + k
+            for t in range(s0, end):
+                loss_map[t] = float(loss_vec[t - s0])
+            if plan is not None:
+                plan.stall(end)  # inside the watchdog's timed window
+            straggled = watchdog.observe(end, time.time() - t0)
+            for t in range(s0, end):
+                if t % log_every == 0:
+                    print(f"[train {arch} sync={sync_mode}] step {t} "
+                          f"loss={loss_vec[t - s0]:.4f}", flush=True)
+            if mgr and end // ckpt_every > s0 // ckpt_every:
+                mgr.save(end, state, blocking=False)
+                saved_at = end
+            if die_at_step is not None and end >= die_at_step:
+                if mgr:
+                    mgr.wait()
+                print(f"[train] simulated preemption at step {end}",
+                      flush=True)
+                sys.exit(17)
+            next_start = end
+            # membership-change events apply at superstep boundaries: the
+            # in-flight superstep is already drained here (DESIGN.md §7)
+            if controller is not None and end < steps:
+                if plan is not None:
+                    target = plan.membership_event(
+                        end, controller.worker.workers)
+                    if target is not None:
+                        controller.request(target, "injected worker-kill")
+                if evict_stragglers and straggled:
+                    controller.request(
+                        controller.worker.workers - 1,
+                        f"straggler verdict at step {end}")
+                resize_request = controller.take_pending()
+                if resize_request is not None:
+                    break
+        if resize_request is None:
+            break
+        feed.stop()
+        if mgr:
+            mgr.wait()  # never race an async save with the restore rung
+        target, _reason = resize_request
+        state, new_super_fn, outcome = controller.resize(state, target,
+                                                         next_start)
+        if new_super_fn is not None:
+            super_fn = new_super_fn
+            put = (lambda p, s, k, m=controller.mesh, w=controller.worker:
+                   put_worker_sharded(p, s, k, m, w))
+            # new mesh => recompile + new timing regime: stale window stats
+            # would flag the first post-resize superstep as a straggler
+            watchdog = StragglerWatchdog(superstep=superstep)
+        if outcome.restart_step is not None:
+            next_start = outcome.restart_step  # replay from the checkpoint
+
+    losses = [loss_map[s] for s in sorted(loss_map)]
     if mgr:
         if saved_at == steps:
             mgr.wait()
         else:
             mgr.save(steps, state, blocking=True)
+    if metrics_out:
+        with open(metrics_out, "w") as f:
+            json.dump({
+                "arch": arch, "sync": sync_mode, "steps": steps,
+                "losses": losses,
+                "resizes": ([o.as_dict() for o in controller.outcomes]
+                            if controller else []),
+                "faults": plan.log if plan else [],
+                "workers_final": (controller.worker.workers
+                                  if controller else None),
+            }, f, indent=1)
+        print(f"[train] wrote metrics to {metrics_out}", flush=True)
     return state, losses
 
 
@@ -326,6 +438,20 @@ def main():
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--compress", action="store_true")
     ap.add_argument("--full-config", action="store_true")
+    ap.add_argument("--inject", default=None,
+                    help="deterministic fault-injection spec "
+                         "(launch/faults.py), e.g. "
+                         "'kill@6:to=3,torn@8,io@restore:times=2'")
+    ap.add_argument("--inject-seed", type=int, default=0,
+                    help="seed for the fault plan's randomness (unspecified "
+                         "torn fractions)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write a JSON artifact with the per-step loss "
+                         "sequence, resize outcomes, and fired faults "
+                         "(CI / test assertions)")
+    ap.add_argument("--evict-stragglers", action="store_true",
+                    help="feed straggler-watchdog verdicts to the elastic "
+                         "resize controller (shed one worker per verdict)")
     args = ap.parse_args()
     _, losses = train(args.arch, args.steps, args.sync, args.batch, args.seq,
                       args.ckpt_dir, args.ckpt_every, args.die_at_step,
@@ -334,7 +460,10 @@ def main():
                       workers=args.workers,
                       logical_shards=args.logical_shards,
                       staleness=args.staleness, layerwise=args.layerwise,
-                      optim=args.optim, ring_dtype=args.ring_dtype)
+                      optim=args.optim, ring_dtype=args.ring_dtype,
+                      inject=args.inject, inject_seed=args.inject_seed,
+                      metrics_out=args.metrics_out,
+                      evict_stragglers=args.evict_stragglers)
     print(f"[train] done: first-10 mean {np.mean(losses[:10]):.4f} -> "
           f"last-10 mean {np.mean(losses[-10:]):.4f}")
 

@@ -391,6 +391,34 @@ def init_worker_state(cfg: ArchConfig, key, sync: SyncConfig,
     return state
 
 
+def resize_worker_state(state, sync: SyncConfig, old_worker: WorkerConfig,
+                        new_worker: WorkerConfig):
+    """Re-slot a worker-route TrainState across an elastic membership
+    change N -> N' at a superstep boundary (DESIGN.md §7), WITHOUT going
+    through a checkpoint.
+
+    Strategies with replicated state (bsp, chaos τ=0) pass through
+    untouched — the resize is bit-exact because the state never depended on
+    the worker count in the first place.  Stacked strategies (localsgd,
+    chaos τ>=1) re-slot every (N, ...) leaf — params, optimizer moments,
+    the step counter, and the sync state's "worker"-layout keys — via
+    ``train/sync.py::reslot_stacked``'s documented shrink/grow rule;
+    "shard"-layout sync keys (the compression residual) ride through
+    unchanged because ``logical_shards`` is the resize invariant."""
+    from repro.train.sync import reslot_stacked
+
+    strat = get_strategy(sync)
+    state = dict(state)
+    sync_state = state.pop("sync")
+    if strat.stacked_state:
+        state = {k: jax.tree.map(
+                     lambda x: reslot_stacked(x, old_worker.workers,
+                                              new_worker.workers), v)
+                 for k, v in state.items()}
+    state["sync"] = strat.resize_state(sync_state, old_worker, new_worker)
+    return state
+
+
 def make_worker_superstep(cfg: ArchConfig, sync: SyncConfig,
                           worker: WorkerConfig, mesh, optimizer=None):
     """Superstep over the worker mesh: the K-step ``lax.scan`` runs INSIDE

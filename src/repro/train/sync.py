@@ -25,6 +25,14 @@ Protocol (one strategy instance per ``SyncConfig``):
                             residual), or ``"replicated"``
 ``shard_view(worker)``      the shard_map PartitionSpec implied by the above
 ``checkpoint_layout()``     human-readable layout contract for tooling
+``resize_state(sync_state, old_worker, new_worker)``  re-slot the sync
+                            state across an elastic membership change
+                            N -> N' at a superstep boundary (DESIGN.md
+                            §7): replicated and shard-stacked keys pass
+                            through unchanged (``logical_shards`` is the
+                            resize invariant), worker-stacked keys are
+                            re-slotted by ``reslot_stacked``'s documented
+                            shrink/grow rule
 ``combine_grads`` is supplied BY the execution path via ``StepContext``
                             (identity under implicit SPMD, the fixed-shape
                             gathered shard mean on the worker mesh)
@@ -110,6 +118,42 @@ def get_strategy(sync: SyncConfig) -> "SyncStrategy":
 
 def _identity(tree):
     return tree
+
+
+# ---------------------------------------------------------------------------
+# elastic re-slot rule (DESIGN.md §7): how a worker-stacked (N, ...) leaf
+# maps onto N' slots when the worker mesh resizes at a superstep boundary.
+#   N' == N                pass through (bit-exact)
+#   N  == g·N' (shrink)    new worker j <- MEAN of old workers
+#                          [j·g, (j+1)·g)  — the same operation localsgd's
+#                          boundary applies anyway, and it collapses chaos'
+#                          O(lr·τ) transient divergence onto the group mean
+#   N' == g·N  (grow)      new workers [j·g, (j+1)·g) <- COPY of old worker
+#                          j (each old worker seeds g fresh slots)
+#   otherwise              every new worker <- the global mean over all old
+#                          workers (the fully collapsed fallback)
+# Means accumulate in f32 and cast back to the leaf dtype, mirroring
+# ``gathered_shard_mean``'s convention.  Replicated state never passes
+# through here (bsp / chaos τ=0 resizes are bit-exact by construction);
+# for stacked strategies the result is defined-but-different — pinned by
+# tests/test_elastic_resize.py.
+# ---------------------------------------------------------------------------
+def reslot_stacked(x, n_old: int, n_new: int):
+    x = jnp.asarray(x)
+    if x.ndim < 1 or x.shape[0] != n_old:
+        raise ValueError(
+            f"reslot_stacked expects a leading ({n_old}, ...) worker axis, "
+            f"got shape {tuple(x.shape)}")
+    if n_new == n_old:
+        return x
+    if n_old % n_new == 0:
+        g = n_old // n_new
+        grouped = x.reshape((n_new, g) + x.shape[1:])
+        return jnp.mean(grouped.astype(jnp.float32), axis=1).astype(x.dtype)
+    if n_new % n_old == 0:
+        return jnp.repeat(x, n_new // n_old, axis=0)
+    m = jnp.mean(x.astype(jnp.float32), axis=0).astype(x.dtype)
+    return jnp.broadcast_to(m[None], (n_new,) + x.shape[1:])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -223,6 +267,27 @@ class BspStrategy:
         return ("worker-stacked (leading (N, ...) axis; checkpoints pin "
                 "the worker count)" if self.stacked_state else
                 "replicated (worker-count-invariant checkpoints)")
+
+    def resize_state(self, sync_state, old_worker, new_worker) -> dict:
+        """Re-slot this strategy's sync state across an elastic membership
+        change N -> N' (DESIGN.md §7).  The rule is driven entirely by
+        ``worker_sync_layout()``: "worker" keys (chaos' staleness ring,
+        localsgd has none beyond params/opt) re-slot their leading (N, ...)
+        axis via ``reslot_stacked``; "shard" keys (the compression
+        residual, stacked over ``logical_shards``) and replicated keys pass
+        through unchanged — ``logical_shards`` is the resize invariant, so
+        shard-stacked state stays bit-exact across any N -> N'."""
+        if new_worker.logical_shards != old_worker.logical_shards:
+            raise ValueError(
+                "elastic resize must keep logical_shards fixed (it is the "
+                f"bit-exactness anchor), got {old_worker.logical_shards} -> "
+                f"{new_worker.logical_shards}")
+        layout = self.worker_sync_layout()
+        return {k: (jax.tree.map(
+                        lambda x: reslot_stacked(x, old_worker.workers,
+                                                 new_worker.workers), v)
+                    if layout.get(k) == "worker" else v)
+                for k, v in sync_state.items()}
 
     # -- shared pieces --------------------------------------------------
     def _maybe_compress(self, ctx: StepContext, grads, sync_state):

@@ -92,6 +92,106 @@ def test_restore_shape_mismatch_names_leaf_path(tmp_path):
     assert "different state layout" in msg
 
 
+def test_torn_write_detected_and_falls_back(tmp_path):
+    """A truncated payload (power loss the atomic rename can't save us
+    from) fails the manifest length/CRC check; auto restore skips it and
+    lands on the newest OLDER checkpoint that validates."""
+    mgr = CheckpointManager(str(tmp_path), keep_n=3)
+    mgr.save(1, _state(1))
+    mgr.save(2, _state(2))
+    payload = tmp_path / "step_0000000002" / "arrays.npz"
+    payload.write_bytes(payload.read_bytes()[:100])   # tear it
+    restored, step = mgr.restore(_state())
+    assert step == 1
+    for a, b in zip(jax.tree.leaves(_state(1)), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_torn_write_crc_catches_same_length_corruption(tmp_path):
+    """Bit-rot that preserves the byte length is caught by the CRC."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _state(1))
+    mgr.save(2, _state(2))
+    payload = tmp_path / "step_0000000002" / "arrays.npz"
+    raw = bytearray(payload.read_bytes())
+    raw[len(raw) // 2] ^= 0xFF
+    payload.write_bytes(bytes(raw))
+    _, step = mgr.restore(_state())
+    assert step == 1
+
+
+def test_pinned_corrupt_step_raises(tmp_path):
+    """An explicitly pinned step that fails validation must raise (the
+    caller asked for THAT checkpoint), never silently substitute."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(2, _state())
+    payload = tmp_path / "step_0000000002" / "arrays.npz"
+    payload.write_bytes(payload.read_bytes()[:50])
+    with pytest.raises(ValueError, match="torn payload"):
+        mgr.restore(_state(), step=2)
+
+
+def test_all_candidates_corrupt_raises_filenotfound(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _state())
+    (tmp_path / "step_0000000001" / "arrays.npz").write_bytes(b"junk")
+    with pytest.raises(FileNotFoundError, match="every candidate"):
+        mgr.restore(_state())
+
+
+def test_pre_checksum_checkpoint_still_restores(tmp_path):
+    """Back-compat: checkpoints written before the CRC stamp (no crc32 /
+    payload_bytes in the manifest) restore with validation skipped."""
+    import json
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, _state())
+    man = tmp_path / "step_0000000003" / "manifest.json"
+    meta = json.loads(man.read_text())
+    meta.pop("crc32"), meta.pop("payload_bytes")
+    man.write_text(json.dumps(meta))
+    _, step = mgr.restore(_state())
+    assert step == 3
+
+
+def test_transient_io_errors_retried(tmp_path):
+    """The first two payload reads raise an injected OSError; the bounded
+    backoff absorbs them and the restore succeeds on the third attempt."""
+    from repro.launch.faults import FaultPlan
+    plan = FaultPlan.from_spec("io@restore:times=2")
+    mgr = CheckpointManager(str(tmp_path), io_retries=3, io_backoff=0.01,
+                            fault=plan)
+    mgr.save(5, _state())
+    _, step = mgr.restore(_state())
+    assert step == 5
+    assert len([e for e in plan.log if e["kind"] == "io"]) == 2
+
+
+def test_transient_io_errors_exhaust_retries(tmp_path):
+    """More injected failures than the retry budget: the OSError surfaces
+    (a genuinely dead filesystem must not hang in a retry loop)."""
+    from repro.launch.faults import FaultPlan
+    plan = FaultPlan.from_spec("io@restore:times=9")
+    mgr = CheckpointManager(str(tmp_path), io_retries=2, io_backoff=0.01,
+                            fault=plan)
+    mgr.save(5, _state())
+    with pytest.raises(OSError, match="injected transient"):
+        mgr.restore(_state())
+
+
+def test_fault_injected_torn_write_roundtrip(tmp_path):
+    """End-to-end through the injector: a FaultPlan tears the step-2
+    checkpoint as it lands; restore detects and falls back to step 1."""
+    from repro.launch.faults import FaultPlan
+    plan = FaultPlan.from_spec("torn@2:frac=0.5")
+    mgr = CheckpointManager(str(tmp_path), fault=plan)
+    mgr.save(1, _state(1))
+    mgr.save(2, _state(2))
+    assert plan.log[0]["kind"] == "torn"
+    _, step = mgr.restore(_state())
+    assert step == 1
+
+
 def test_elastic_restore_under_new_sharding(tmp_path):
     """Restore with explicit shardings (the elastic-rescale path): arrays
     come back on the requested devices."""

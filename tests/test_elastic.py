@@ -97,3 +97,143 @@ def test_resume_on_different_device_count(tmp_path):
     want = ast.literal_eval(ref.split("REF")[1].strip().splitlines()[0])
     import numpy as np
     np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_make_mesh_from_available_over_ask_is_actionable():
+    """Satellite bugfix: a mesh_shape needing more devices than are visible
+    must raise naming BOTH counts and the XLA_FLAGS remedy — not crash
+    inside jax.make_mesh with an opaque shape error."""
+    import pytest
+    from repro.launch.elastic import make_mesh_from_available
+    with pytest.raises(ValueError) as ei:
+        make_mesh_from_available((64, 2))
+    msg = str(ei.value)
+    assert "128 device(s)" in msg
+    assert "xla_force_host_platform_device_count=128" in msg
+
+
+def test_resume_on_non_dividing_device_count(tmp_path):
+    """Resume a 2-device run on 3 devices — a count that divides neither
+    the old mesh nor the batch axis cleanly; shardings_for's per-dim
+    divisibility fallback must still produce a working step whose losses
+    continue the run (same global batch)."""
+    common = """
+        import jax, numpy as np, dataclasses
+        import repro.configs as C
+        from repro.core.chaos import SyncConfig
+        from repro.data.pipeline import TokenPipeline
+        from repro.train.step import (init_train_state, make_train_step,
+                                      state_specs)
+        from repro.train import sharding as SH
+        from repro.checkpoint.manager import CheckpointManager
+        from repro.launch.elastic import resume_elastic, make_mesh_from_available
+        from repro.optim import sgd
+        cfg = dataclasses.replace(C.smoke("qwen3-14b"), param_dtype="float32")
+        sync = SyncConfig("bsp")
+        pipe = TokenPipeline(cfg.vocab_size, batch=8, seq_len=32)
+        opt = sgd(lambda s: 0.01)
+    """
+    _run(2, common + f"""
+        mesh = make_mesh_from_available((2,), ("data",))
+        with SH.use_mesh(mesh):
+            state = init_train_state(cfg, jax.random.key(0), sync, opt)
+            sh = SH.shardings_for(state_specs(cfg, sync, opt), state, mesh)
+            step = jax.jit(make_train_step(cfg, sync, opt),
+                           in_shardings=(sh, None), out_shardings=(sh, None))
+            for t in range(4):
+                state, m = step(state, pipe.batch_at(t))
+        CheckpointManager(r"{tmp_path}").save(4, state)
+        print("SAVED", float(m["loss"]))
+    """)
+    out = _run(3, common + f"""
+        state, start, mesh, step = resume_elastic(
+            cfg, sync, r"{tmp_path}", mesh_shape=(3,), axes=("data",),
+            optimizer=opt)
+        assert start == 4 and mesh.devices.size == 3
+        losses = []
+        for t in range(start, start + 2):
+            state, m = step(state, pipe.batch_at(t))
+            losses.append(float(m["loss"]))
+        assert all(np.isfinite(losses)), losses
+        print("RESUMED", losses)
+    """)
+    assert "RESUMED" in out
+
+
+def test_localsgd_stacked_checkpoint_across_worker_counts(tmp_path):
+    """Worker-stacked (N, ...) localsgd checkpoints pin N: restoring into
+    an N'=2 template must FAIL the shape check, and the supported route —
+    restore at the old N, then ``resize_worker_state`` — must apply the
+    documented group-mean rule (defined-but-different, pinned here leaf by
+    leaf against a numpy reference)."""
+    _run(4, f"""
+        import jax, numpy as np
+        import repro.configs as C
+        from repro.core.chaos import SyncConfig
+        from repro.core.types import WorkerConfig
+        from repro.data.mnist import make_dataset
+        from repro.data.pipeline import ImagePipeline
+        from repro.launch.mesh import make_host_mesh
+        from repro.launch.train import put_worker_sharded
+        from repro.train.step import (init_worker_state, make_optimizer,
+                                      make_worker_superstep,
+                                      resize_worker_state)
+        from repro.checkpoint.manager import CheckpointManager
+
+        cfg = C.get("chaos-small")
+        imgs, labels = make_dataset(64, seed=0)
+        pipe = ImagePipeline(imgs, labels, batch=8, sample_mode="queue")
+        worker = WorkerConfig(workers=4, logical_shards=8)
+        mesh = make_host_mesh(4)
+        sync = SyncConfig("localsgd", local_steps=2, axis_name=worker.axis)
+        opt = make_optimizer(cfg, total_steps=8)
+        fn = make_worker_superstep(cfg, sync, worker, mesh, opt)
+        state = init_worker_state(cfg, jax.random.key(0), sync, worker, opt)
+        # odd step count: workers hold genuinely diverged local params
+        state, _ = fn(state, put_worker_sharded(pipe, 0, 3, mesh, worker))
+        CheckpointManager(r"{tmp_path}").save(3, state)
+        print("SAVED4")
+    """)
+    out = _run(2, f"""
+        import jax, numpy as np
+        import repro.configs as C
+        from repro.core.chaos import SyncConfig
+        from repro.core.types import WorkerConfig
+        from repro.train.step import (init_worker_state, make_optimizer,
+                                      resize_worker_state)
+        from repro.checkpoint.manager import CheckpointManager
+
+        cfg = C.get("chaos-small")
+        sync = SyncConfig("localsgd", local_steps=2, axis_name="workers")
+        opt = make_optimizer(cfg, total_steps=8)
+        mgr = CheckpointManager(r"{tmp_path}")
+
+        # restoring a 4-stacked checkpoint into a 2-stacked template fails
+        # the shape check with the worker-count diagnosis
+        t2 = init_worker_state(cfg, jax.random.key(0), sync,
+                               WorkerConfig(2, logical_shards=8), opt)
+        try:
+            mgr.restore(t2)
+            raise SystemExit("shape check did not fire")
+        except ValueError as e:
+            assert "worker-stacked" in str(e), e
+
+        # supported route: restore at the WRITTEN N, then re-slot 4 -> 2
+        t4 = init_worker_state(cfg, jax.random.key(0), sync,
+                               WorkerConfig(4, logical_shards=8), opt)
+        state4, step = mgr.restore(t4)
+        assert step == 3
+        state2 = resize_worker_state(state4, sync,
+                                     WorkerConfig(4, logical_shards=8),
+                                     WorkerConfig(2, logical_shards=8))
+        for k in ("params", "opt", "step"):
+            for a4, a2 in zip(jax.tree.leaves(state4[k]),
+                              jax.tree.leaves(state2[k])):
+                a4 = np.asarray(a4); a2 = np.asarray(a2)
+                assert a2.shape == (2,) + a4.shape[1:], (a4.shape, a2.shape)
+                want = a4.astype(np.float32).reshape(
+                    (2, 2) + a4.shape[1:]).mean(axis=1).astype(a4.dtype)
+                np.testing.assert_array_equal(a2, want)
+        print("RESLOTTED")
+    """)
+    assert "RESLOTTED" in out
