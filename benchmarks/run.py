@@ -437,6 +437,51 @@ def bench_elastic(quick=False):
 
 
 # ---------------------------------------------------------------------------
+# Overlap study (DESIGN.md §8): is the layerwise per-bucket exchange hidden
+# behind backward compute?  Interleaved (backprop-time bucket collectives)
+# vs collect-then-walk under injected per-byte collective latency, with the
+# roofline collective-bytes model as the predicted blocking cost.
+# ---------------------------------------------------------------------------
+def bench_overlap(quick=False):
+    runs = _run_grid_subprocess("benchmarks.overlap", quick)
+    base = {(r["net"], r["workers"], r["schedule"]): r["us_per_step"]
+            for r in runs if r["delay_ns_per_byte"] == 0}
+    collect = {(r["net"], r["workers"], r["delay_ns_per_byte"]): r
+               for r in runs if r["schedule"] == "collect"}
+    for r in runs:
+        d = r["delay_ns_per_byte"]
+        tw = collect.get((r["net"], r["workers"], d))
+        # interleaved speedup vs the blocking schedule at the same delay —
+        # the overlap win (nan on the collect rows' own delay-0 baselines)
+        r["speedup_vs_collect"] = (tw["us_per_step"] / r["us_per_step"]
+                                   if tw and r["schedule"] == "interleave"
+                                   else float("nan"))
+        pred = r.get("predicted_exchange_us")
+        # roofline cross-check: measured blocking exchange / predicted
+        # bytes-x-delay (meaningful on the collect rows, where the whole
+        # charge is synchronous; interleaved rows land BELOW 1 by design)
+        r["exchange_vs_roofline"] = (r["exchange_us"] / pred
+                                     if pred else float("nan"))
+        if r["schedule"] == "interleave" and tw and pred:
+            r["hidden_us"] = tw["exchange_us"] - r["exchange_us"]
+            r["hidden_frac_of_predicted"] = r["hidden_us"] / pred
+        name = (f"overlap/{r['net']}/N{r['workers']}/{r['schedule']}"
+                f"/delay{d:.0f}")
+        row(name, r["us_per_step"],
+            f"exchange={r['exchange_us']:.0f}us"
+            f"_roofline={r['exchange_vs_roofline']:.2f}x"
+            f"_vs_collect={r['speedup_vs_collect']:.2f}x")
+    return {"runs": runs, "forced_devices": SCALING_DEVICES,
+            "note": "layerwise bsp+SGD worker path; exchange_us = "
+                    "us_per_step minus the same schedule's delay-0 cell; "
+                    "predicted_exchange_us = compiled-HLO effective "
+                    "collective bytes x injected delay (core/roofline.py "
+                    "convention); interleave hides the charge behind the "
+                    "remaining backward walk, collect takes it "
+                    "synchronously"}
+
+
+# ---------------------------------------------------------------------------
 # Roofline table from the dry-run results (deliverable g summary)
 # ---------------------------------------------------------------------------
 def bench_roofline(quick=False):
@@ -485,33 +530,39 @@ def _write_section_json(out_dir, section, rows, extra, quick):
     print(f"# wrote {path}", flush=True)
 
 
+#: section registry, in run order; ``--only`` choices and help text derive
+#: from it, so a new ``bench_<name>`` only needs one entry here.  Each
+#: section writes ``BENCH_<name>.json``.
+SECTIONS = {
+    "layer_times": bench_layer_times,
+    "perf_model": bench_perf_model,
+    "sync_modes": bench_sync_modes,
+    "kernels": bench_kernels,
+    "train": bench_train,
+    "scaling": bench_scaling,
+    "staleness": bench_staleness,
+    "overlap": bench_overlap,
+    "elastic": bench_elastic,
+    "roofline": bench_roofline,
+    "serving": bench_serving,
+}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None, choices=sorted(SECTIONS),
+                    metavar="SECTION",
+                    help=f"run one section (default: all, in registry "
+                         f"order) — {', '.join(SECTIONS)}")
     ap.add_argument("--out",
                     default=os.path.normpath(
                         os.path.join(os.path.dirname(__file__), "..")),
                     help="directory for the BENCH_<section>.json artifacts")
     args = ap.parse_args()
-    benches = {
-        "layer_times": bench_layer_times,
-        "perf_model": bench_perf_model,
-        "sync_modes": bench_sync_modes,
-        "kernels": bench_kernels,
-        "train": bench_train,
-        "scaling": bench_scaling,
-        "staleness": bench_staleness,
-        "elastic": bench_elastic,
-        "roofline": bench_roofline,
-        "serving": bench_serving,
-    }
-    if args.only and args.only not in benches:
-        ap.error(f"unknown section {args.only!r}; "
-                 f"choose from {', '.join(benches)}")
     os.makedirs(args.out, exist_ok=True)
     print("name,us_per_call,derived")
-    for name, fn in benches.items():
+    for name, fn in SECTIONS.items():
         if args.only and name != args.only:
             continue
         start = len(ROWS)

@@ -94,7 +94,11 @@ def measure(net: str, mode: str, n_workers: int, use_kernel: bool,
     cfg = C.get(net)
     if use_kernel:
         cfg = dataclasses.replace(cfg, use_kernel=True)
-    sync = SyncConfig(mode, local_steps=LOCAL_STEPS, axis_name="workers")
+    # staleness picks chaos' τ (1 = the paper's default) but ALSO localsgd's
+    # τ-ring depth since the overlap PR; these rows measure the classic
+    # blocking boundary average, so pin localsgd to τ=0 explicitly
+    sync = SyncConfig(mode, local_steps=LOCAL_STEPS, axis_name="workers",
+                      staleness=0 if mode == "localsgd" else 1)
     opt = make_optimizer(cfg, total_steps=4096)
     worker, mesh, pipe, super_fn, state, _ = build_worker_cell(
         cfg, sync, n_workers, opt)

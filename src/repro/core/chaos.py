@@ -39,11 +39,13 @@ paper's Result 4 (accuracy parity) rigorously.
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,17 +78,135 @@ class SyncConfig:
     #: upcast to float32 on apply — the error is O(1 ulp bf16) per applied
     #: exchange, NOT accumulated: each slot is overwritten, not re-added).
     ring_dtype: Optional[str] = None
+    #: overlap harness (DESIGN.md §8): injected per-byte latency, in
+    #: nanoseconds/byte, charged to every *explicit* collective on the
+    #: worker mesh (the ``all_gather`` in ``gathered_shard_mean``, the
+    #: ``pmean`` in ``localsgd_average`` / the τ-ring boundary).  0.0 (the
+    #: default) inserts NOTHING into the compiled graph, so every
+    #: bit-exactness pin is untouched.  >0 models an interconnect of
+    #: bandwidth 1/delay via deadline-sampling callbacks: the deadline is
+    #: stamped when the collective's operand is ready and a gate sleeps
+    #: only the *remainder* at the point the result is consumed — so on
+    #: single-core CI, latency hidden behind compute shows up as a shorter
+    #: residual sleep, independent of XLA thunk concurrency.
+    collective_delay_ns_per_byte: float = 0.0
+    #: layerwise worker-mesh schedule: fire each bucket's exchange the
+    #: moment that layer's gradient is produced during backprop (the
+    #: interleaved shard tape, DESIGN.md §8) instead of collecting the full
+    #: stacked gradient tree first and then walking buckets.  Off by
+    #: default: restructuring the backward into per-layer ``lax.map``
+    #: bodies changes which canonical form XLA:CPU picks for each dw
+    #: conv/matmul, so the tape's gradients agree with the batched path
+    #: only to ~1 ulp (losses stay bit-equal) — the default keeps the
+    #: collect-then-walk schedule that IS bit-exact to batched (the
+    #: layerwise pins).  The interleaved schedule carries its own pins
+    #: (run-to-run determinism, worker-count invariance, allclose vs
+    #: collect) and is what ``benchmarks/overlap.py`` measures.  Ignored
+    #: (falls back to collect-then-walk) when the model has no shard tape
+    #: or the optimizer needs a whole-tree ``pre_apply`` (adamw's
+    #: global-norm clip).
+    interleave: bool = False
 
     def __post_init__(self):
         if self.staleness < 0:
             raise ValueError(
                 f"staleness must be >= 0, got {self.staleness}")
+        if self.collective_delay_ns_per_byte < 0:
+            raise ValueError(
+                "collective_delay_ns_per_byte must be >= 0, got "
+                f"{self.collective_delay_ns_per_byte}")
         if self.ring_dtype is not None:
             jnp.dtype(self.ring_dtype)  # fail fast on an unknown dtype name
 
 
 def zeros_like_f32(tree):
     return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+
+# ---------------------------------------------------------------------------
+# Collective-latency injection (overlap harness, DESIGN.md §8).
+#
+# Forced host devices share one CPU core, so a busy-loop "slow collective"
+# cannot show an overlap win.  Instead each injected collective is a
+# *deadline pair*: a ``start`` callback samples ``now + bytes*delay`` when
+# the collective's operand is ready (= issue time), and a ``gate`` callback
+# at the consumer sleeps only the remainder.  Compute executed between issue
+# and consume eats into the deadline, so hidden latency is measured by wall
+# clock rather than by thunk concurrency.  Both callbacks return values that
+# are folded into live data (a where-select tie and an add-exact-zero), so
+# XLA cannot dead-code-eliminate or reorder them past their anchors; neither
+# changes any value, and with delay == 0 none of this is ever inserted.
+# ---------------------------------------------------------------------------
+_EPOCH = time.monotonic()
+
+
+def _now_ms() -> np.float32:
+    return np.float32((time.monotonic() - _EPOCH) * 1e3)
+
+
+def _start_cb(_anchor, delay_ms):
+    return np.float32(float(_now_ms()) + float(delay_ms))
+
+
+def _gate_cb(deadline, _anchor):
+    rem = (float(deadline) - float(_now_ms())) * 1e-3
+    if rem > 0:
+        time.sleep(rem)
+    return np.float32(0.0)
+
+
+def _first_scalar(tree):
+    return jnp.ravel(jax.tree.leaves(tree)[0])[0].astype(jnp.float32)
+
+
+def tree_bytes(tree) -> int:
+    """Static byte count of a (traced or concrete) pytree."""
+    return sum(l.size * jnp.dtype(l.dtype).itemsize
+               for l in jax.tree.leaves(tree))
+
+
+def delay_start(anchor_tree, delay_ms):
+    """Sample the deadline ``now + delay_ms`` (ms, f32 token) the moment the
+    first leaf of ``anchor_tree`` is available.  ``delay_ms`` may be traced
+    (e.g. scaled to zero off a localsgd boundary)."""
+    return jax.pure_callback(
+        _start_cb, jax.ShapeDtypeStruct((), np.float32),
+        _first_scalar(anchor_tree), jnp.asarray(delay_ms, jnp.float32))
+
+
+def delay_gate(tree, token, anchor_tree):
+    """Sleep until ``token``'s deadline once ``anchor_tree`` is available,
+    then pass ``tree`` through unchanged.  The gate's (always 0.0) output is
+    added to the first leaf so the sleep cannot be eliminated; values are
+    untouched (x + 0.0 == x)."""
+    z = jax.pure_callback(
+        _gate_cb, jax.ShapeDtypeStruct((), np.float32),
+        token, _first_scalar(anchor_tree))
+    leaves, treedef = jax.tree.flatten(tree)
+    leaves = [leaves[0] + z.astype(leaves[0].dtype)] + leaves[1:]
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def delay_tie(tree, token):
+    """Order-tie: make ``tree`` depend on ``token`` without changing values
+    (the select is never taken — tokens are finite).  Used to pin a start
+    callback into the backward walk so XLA cannot hoist it to the end."""
+    if token is None:
+        return tree
+    return jax.tree.map(
+        lambda x: jnp.where(token < jnp.inf, x, jnp.zeros_like(x)), tree)
+
+
+def inject_blocking_delay(tree, n_bytes, delay_ns_per_byte, scale=None):
+    """Model a *synchronous* collective: deadline sampled when ``tree`` is
+    ready, gate immediately after — the full ``n_bytes * delay`` charge lands
+    on the critical path.  ``scale`` (traced, optional) multiplies the delay
+    (e.g. 0 off a localsgd boundary)."""
+    ms = n_bytes * delay_ns_per_byte * 1e-6
+    if scale is not None:
+        ms = jnp.asarray(ms, jnp.float32) * scale
+    token = delay_start(tree, ms)
+    return delay_gate(tree, token, tree)
 
 
 # ---------------------------------------------------------------------------
@@ -99,17 +219,28 @@ def init_sync_state(sync: SyncConfig, params):
     return get_strategy(sync).init_state(params)
 
 
-def localsgd_average(sync: SyncConfig, params, step):
+def localsgd_average(sync: SyncConfig, params, step,
+                     delay_ns_per_byte: float = 0.0):
     """Paper strategy-C boundary: every ``local_steps``-th step the replicas'
     parameters are averaged over ``sync.axis_name``.  The boundary derives
     from the (scan-carried, checkpointed) step counter — same arithmetic as
     the shard_map worker path — so no extra sync state is needed.  Under
     plain jit (axis_name=None, e.g. single logical device or implicit SPMD)
     the average is the identity but the select still runs.  Returns the new
-    params."""
+    params.
+
+    ``delay_ns_per_byte`` > 0 (overlap harness) charges the all-reduce
+    2 × param-bytes synchronously, scaled to zero off the boundary — this is
+    the blocking baseline the τ-ring boundary (train/sync.py) hides."""
     do_avg = ((step + 1) % sync.local_steps) == 0
     if sync.axis_name is not None:
         avg = jax.tree.map(lambda p: jax.lax.pmean(p, sync.axis_name), params)
+        if delay_ns_per_byte > 0:
+            # all-reduce effective bytes = 2 × tree bytes (roofline.py's
+            # parse_collectives convention)
+            avg = inject_blocking_delay(
+                avg, 2 * tree_bytes(params), delay_ns_per_byte,
+                scale=do_avg.astype(jnp.float32))
     else:
         avg = params
     return jax.tree.map(lambda p, a: jnp.where(do_avg, a, p), params, avg)
@@ -138,7 +269,7 @@ def compress_grads(grads, residual):
 # synchronize, mirroring the paper's worker model.
 # ---------------------------------------------------------------------------
 def gathered_shard_mean(tree, axis_name: str, n_workers: int,
-                        n_shards: int):
+                        n_shards: int, delay_ns_per_byte: float = 0.0):
     """Worker-count-invariant mean of stacked per-shard gradients.
 
     ``tree`` leaves are ``(n_shards / n_workers, ...)`` stacks of this
@@ -150,7 +281,13 @@ def gathered_shard_mean(tree, axis_name: str, n_workers: int,
     it with one FIXED-shape ``sum`` over ``n_shards``.  The floating-point
     reduction is therefore identical for every N dividing ``n_shards``,
     which is what makes bsp/chaos updates (and their checkpoints) bit-exact
-    across worker counts (tests/test_worker_scaling.py)."""
+    across worker counts (tests/test_worker_scaling.py).
+
+    ``delay_ns_per_byte`` > 0 (overlap harness) charges the gather its
+    result bytes *synchronously* right here — the collect-then-walk /
+    non-layerwise baseline.  The interleaved layerwise schedule instead
+    passes 0 and places its own start/gate pair around the backward walk
+    (train/step.py), so the same bytes land off the critical path."""
     if n_workers > 1:
         # gather in the *native* dtype: with per-shard bf16 compression the
         # collective moves half the bytes, and the fixed-shape reduction
@@ -158,6 +295,10 @@ def gathered_shard_mean(tree, axis_name: str, n_workers: int,
         tree = jax.tree.map(
             lambda x: jax.lax.all_gather(x, axis_name, axis=0, tiled=True),
             tree)
+        if delay_ns_per_byte > 0:
+            # all-gather effective bytes = result bytes (roofline convention)
+            tree = inject_blocking_delay(
+                tree, tree_bytes(tree), delay_ns_per_byte)
     inv = 1.0 / n_shards
     # accumulate in f32 regardless of wire dtype (identity for f32 inputs,
     # so the uncompressed path's bit-exactness contract is untouched)

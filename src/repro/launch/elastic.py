@@ -142,11 +142,21 @@ class ResizeController:
        its shape check and falls through).
     3. **continue degraded at the old N** with an actionable log — a
        failed resize must never kill a healthy run.
+
+    **Straggler re-admission** (``readmit_after``): a worker evicted on a
+    straggler verdict is usually a *transient* straggler (GC pause, noisy
+    neighbour, page-cache cold start) — permanently running degraded wastes
+    the machine.  When ``readmit_after`` is set, a straggler-reason shrink
+    arms a probation window: after that many consecutive clean supersteps
+    (no straggler verdict) the controller requests a grow back to the
+    pre-eviction worker count; any straggle during probation resets the
+    window.  Both transitions are logged.
     """
 
     def __init__(self, cfg: ArchConfig, sync: SyncConfig, optimizer,
                  worker: WorkerConfig, mesh, ckpt_mgr=None,
-                 retries: int = 2, backoff_s: float = 0.05, fault=None):
+                 retries: int = 2, backoff_s: float = 0.05, fault=None,
+                 readmit_after: Optional[int] = None):
         self.cfg = cfg
         self.sync = sync
         self.optimizer = optimizer
@@ -156,6 +166,9 @@ class ResizeController:
         self.retries = retries
         self.backoff_s = backoff_s
         self.fault = fault
+        self.readmit_after = readmit_after
+        #: (pre-eviction worker count, clean supersteps still required)
+        self._probation: Optional[tuple] = None
         self._pending: Optional[tuple] = None
         self.outcomes: list = []
 
@@ -170,6 +183,29 @@ class ResizeController:
     def take_pending(self) -> Optional[tuple]:
         p, self._pending = self._pending, None
         return p
+
+    def observe_boundary(self, straggled: bool):
+        """Feed every superstep boundary's watchdog verdict to the
+        probation clock: a straggle resets the window, ``readmit_after``
+        consecutive clean boundaries trigger the re-admit request."""
+        if self._probation is None:
+            return
+        old_n, remaining = self._probation
+        if straggled:
+            self._probation = (old_n, self.readmit_after)
+            print(f"[elastic] probation reset: straggled again; "
+                  f"{self.readmit_after} clean supersteps required before "
+                  f"re-admission to N={old_n}", flush=True)
+            return
+        remaining -= 1
+        if remaining > 0:
+            self._probation = (old_n, remaining)
+            return
+        self._probation = None
+        print(f"[elastic] probation served: {self.readmit_after} clean "
+              f"superstep(s); re-admitting evicted worker(s) -> N={old_n}",
+              flush=True)
+        self.request(old_n, "straggler probation served")
 
     # -- the resize protocol ------------------------------------------------
     def _build(self, worker: WorkerConfig):
@@ -187,7 +223,23 @@ class ResizeController:
                   f"on N'={n}", flush=True)
         return n
 
-    def resize(self, state, requested: int, boundary_step: int):
+    def _maybe_arm_probation(self, old_n: int, new_n: int, reason: str):
+        """A successful straggler-verdict shrink starts (or extends) the
+        re-admission probation window; a successful grow back to (or past)
+        the probation target clears it."""
+        if self.readmit_after is None:
+            return
+        if new_n < old_n and "straggler" in reason:
+            prev = self._probation[0] if self._probation else 0
+            self._probation = (max(old_n, prev), self.readmit_after)
+            print(f"[elastic] probation armed: evicted straggler(s) "
+                  f"re-admitted back to N={self._probation[0]} after "
+                  f"{self.readmit_after} clean superstep(s)", flush=True)
+        elif self._probation is not None and new_n >= self._probation[0]:
+            self._probation = None
+
+    def resize(self, state, requested: int, boundary_step: int,
+               reason: str = ""):
         """Apply a membership change at a superstep boundary.  Returns
         ``(state, super_fn, outcome)`` and updates ``self.worker`` /
         ``self.mesh`` — on the degraded rung they keep their old values and
@@ -232,6 +284,7 @@ class ResizeController:
                 print(f"[elastic] resized {old.workers} -> {target} "
                       f"worker(s) in-memory at step {boundary_step} "
                       f"({out.latency_s * 1e3:.0f}ms)", flush=True)
+                self._maybe_arm_probation(old.workers, target, reason)
                 return new_state, super_fn, out
             except Exception as e:
                 last_err = e
@@ -265,6 +318,7 @@ class ResizeController:
                 print(f"[elastic] resized {old.workers} -> {target} via "
                       f"checkpoint step {ckpt_step} "
                       f"({out.latency_s * 1e3:.0f}ms)", flush=True)
+                self._maybe_arm_probation(old.workers, target, reason)
                 return new_state, super_fn, out
             except Exception as e:
                 print(f"[elastic] checkpoint-restore at N'={target} "

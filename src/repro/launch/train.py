@@ -232,22 +232,17 @@ def train(arch: str, steps: int, sync_mode: str = "bsp", batch: int = 8,
           layerwise: bool = False, optim: str = "auto",
           ring_dtype: str | None = None, inject: str | None = None,
           inject_seed: int = 0, metrics_out: str | None = None,
-          evict_stragglers: bool = False):
+          evict_stragglers: bool = False, readmit_after: int | None = None,
+          collective_delay: float = 0.0, interleave: bool = False,
+          micro_batches: int | None = None):
     if superstep < 1:
         raise ValueError(f"superstep must be >= 1, got {superstep}")
     plan = FaultPlan.from_spec(inject, seed=inject_seed)
     cfg = C.smoke(arch) if smoke else C.get(arch)
     if use_kernel:
         cfg = dataclasses.replace(cfg, use_kernel=True)
-    if layerwise and cfg.micro_batches > 1:
-        # the ONE genuinely unsupported layerwise combo: per-bucket updates
-        # cannot apply before later micro-batches' gradients exist
-        raise NotImplementedError(
-            "--layerwise does not compose with micro-batch accumulation "
-            f"(arch {arch!r} has micro_batches={cfg.micro_batches}); pick "
-            "an arch with micro_batches=1 or drop --layerwise.  Momentum/"
-            "adamw (--optim), --compress, and --workers>1 all DO compose "
-            "with --layerwise since the ParamBuckets redesign.")
+    if micro_batches is not None:
+        cfg = dataclasses.replace(cfg, micro_batches=micro_batches)
     optimizer = make_optimizer(cfg, base_lr=base_lr, total_steps=steps,
                                kind=optim)
     put = None
@@ -263,13 +258,15 @@ def train(arch: str, steps: int, sync_mode: str = "bsp", batch: int = 8,
         mesh = make_host_mesh(workers)
         sync = SyncConfig(mode=sync_mode, compress=compress,
                           axis_name=worker.axis, staleness=staleness,
-                          layerwise=layerwise, ring_dtype=ring_dtype)
+                          layerwise=layerwise, ring_dtype=ring_dtype,
+                          collective_delay_ns_per_byte=collective_delay,
+                          interleave=interleave)
         super_fn = make_worker_superstep(cfg, sync, worker, mesh, optimizer)
         state = init_worker_state(cfg, jax.random.key(0), sync, worker,
                                   optimizer)
         put = lambda p, s, k: put_worker_sharded(p, s, k, mesh, worker)
         controller = ResizeController(cfg, sync, optimizer, worker, mesh,
-                                      fault=plan)
+                                      fault=plan, readmit_after=readmit_after)
         try:  # SIGUSR1 = the scheduler's preemption warning: shed a worker
             signal.signal(signal.SIGUSR1, lambda *_: controller.request(
                 controller.worker.workers - 1, "SIGUSR1 preemption warning"))
@@ -285,7 +282,9 @@ def train(arch: str, steps: int, sync_mode: str = "bsp", batch: int = 8,
                   "kill events are ignored on this route", flush=True)
         sync = SyncConfig(mode=sync_mode, compress=compress,
                           staleness=staleness, layerwise=layerwise,
-                          ring_dtype=ring_dtype)
+                          ring_dtype=ring_dtype,
+                          collective_delay_ns_per_byte=collective_delay,
+                          interleave=interleave)
         # K=1 is a length-1 scan: every run dispatches through the same scan
         # body, so mixing K across runs/resumes cannot change the numerics
         super_fn = jax.jit(make_superstep(cfg, sync, optimizer),
@@ -352,6 +351,7 @@ def train(arch: str, steps: int, sync_mode: str = "bsp", batch: int = 8,
                     controller.request(
                         controller.worker.workers - 1,
                         f"straggler verdict at step {end}")
+                controller.observe_boundary(straggled)
                 resize_request = controller.take_pending()
                 if resize_request is not None:
                     break
@@ -360,9 +360,9 @@ def train(arch: str, steps: int, sync_mode: str = "bsp", batch: int = 8,
         feed.stop()
         if mgr:
             mgr.wait()  # never race an async save with the restore rung
-        target, _reason = resize_request
-        state, new_super_fn, outcome = controller.resize(state, target,
-                                                         next_start)
+        target, reason = resize_request
+        state, new_super_fn, outcome = controller.resize(
+            state, target, next_start, reason=reason)
         if new_super_fn is not None:
             super_fn = new_super_fn
             put = (lambda p, s, k, m=controller.mesh, w=controller.worker:
@@ -401,8 +401,11 @@ def main():
     ap.add_argument("--sync", default="bsp", choices=sync_modes(),
                     help="synchronization strategy (train/sync.py registry)")
     ap.add_argument("--staleness", type=int, default=1,
-                    help="chaos staleness tau in steps; 0 degenerates "
-                         "exactly to bsp (bit-exact, same checkpoints)")
+                    help="staleness tau: chaos counts steps (0 degenerates "
+                         "exactly to bsp — bit-exact, same checkpoints); "
+                         "localsgd counts boundaries (0 = the blocking "
+                         "K-step average, >=1 the tau-ring stale "
+                         "corrections, DESIGN.md section 8)")
     ap.add_argument("--layerwise", action="store_true",
                     help="per-bucket non-instant updates during backprop "
                          "(paper update rule via the ParamBuckets tape; "
@@ -452,6 +455,24 @@ def main():
     ap.add_argument("--evict-stragglers", action="store_true",
                     help="feed straggler-watchdog verdicts to the elastic "
                          "resize controller (shed one worker per verdict)")
+    ap.add_argument("--readmit-after", type=int, default=None,
+                    help="re-admit a straggler-evicted worker after this "
+                         "many consecutive clean supersteps (probation "
+                         "window; a straggle during probation resets it)")
+    ap.add_argument("--collective-delay", type=float, default=0.0,
+                    help="overlap harness (DESIGN.md §8): inject this many "
+                         "nanoseconds of latency per byte into every "
+                         "explicit worker-mesh collective; 0 leaves the "
+                         "compiled graph untouched")
+    ap.add_argument("--interleave", action="store_true",
+                    help="layerwise worker mesh: fire each bucket's "
+                         "exchange during backprop the moment that layer's "
+                         "gradient is produced (DESIGN.md §8) instead of "
+                         "collect-then-walk; ~1-ulp vs the batched pin")
+    ap.add_argument("--micro-batches", type=int, default=None,
+                    help="override the arch's micro-batch accumulation "
+                         "count (single-instance route; composes with "
+                         "--layerwise via the bucket-granular accumulator)")
     args = ap.parse_args()
     _, losses = train(args.arch, args.steps, args.sync, args.batch, args.seq,
                       args.ckpt_dir, args.ckpt_every, args.die_at_step,
@@ -463,7 +484,11 @@ def main():
                       optim=args.optim, ring_dtype=args.ring_dtype,
                       inject=args.inject, inject_seed=args.inject_seed,
                       metrics_out=args.metrics_out,
-                      evict_stragglers=args.evict_stragglers)
+                      evict_stragglers=args.evict_stragglers,
+                      readmit_after=args.readmit_after,
+                      collective_delay=args.collective_delay,
+                      interleave=args.interleave,
+                      micro_batches=args.micro_batches)
     print(f"[train] done: first-10 mean {np.mean(losses[:10]):.4f} -> "
           f"last-10 mean {np.mean(losses[-10:]):.4f}")
 

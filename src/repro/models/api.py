@@ -48,6 +48,12 @@ class ModelOps:
     cache_specs: Optional[Callable] = None
     decode: Optional[Callable] = None
     forward: Optional[Callable] = None
+    #: worker-mesh interleaved tape (DESIGN.md §8), families that have one:
+    #: ``shard_bucket_grads(params, shards, on_bucket) -> (losses, metrics,
+    #: grads)`` over a stacked (s, b, ...) micro-shard batch, firing
+    #: ``on_bucket(bucket, grads_b_stacked) -> token | None`` the moment
+    #: each layer's stacked gradient is produced during backprop.
+    shard_bucket_grads: Optional[Callable] = None
 
 
 def _mod(cfg: ArchConfig):
@@ -146,6 +152,10 @@ def get_ops(cfg: ArchConfig) -> ModelOps:
             lambda params, *a, **k: mod.forward(params, *a, cfg=cfg, **k)
             if cfg.family != "cnn" else mod.forward(params, *a, cfg, **k)),
     )
+    if hasattr(mod, "loss_and_shard_bucket_grads"):
+        ops.shard_bucket_grads = (
+            lambda params, shards, on_bucket:
+            mod.loss_and_shard_bucket_grads(params, shards, cfg, on_bucket))
     if hasattr(mod, "init_cache"):
         cache_dtype = jnp.dtype("bfloat16")
         ops.init_cache = lambda b, s: mod.init_cache(

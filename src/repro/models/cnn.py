@@ -235,6 +235,89 @@ def loss_and_bucket_grads(params, batch, cfg: ArchConfig, tape,
     return loss, metrics, new_params, grads
 
 
+def loss_and_shard_bucket_grads(params, shards, cfg: ArchConfig, on_bucket,
+                                use_kernel: bool | None = None):
+    """Worker-mesh flavour of the bucket tape (DESIGN.md §8): the per-layer
+    backward walk over a stack of micro-shards, firing ``on_bucket`` the
+    moment each layer's STACKED gradient exists.
+
+    ``shards`` is the batch pytree with a leading ``(s, b, ...)`` micro-shard
+    axis.  Output matches ``lax.map(value_and_grad(loss_fn))`` over that axis
+    exactly — ``(losses (s,), metrics {(s,)}, grads {layer: (s, ...) f32})``
+    — because every per-shard computation runs through the same per-shard
+    ``lax.map`` bodies with the same layer closures (``_layer_fns``); only
+    the *schedule* differs: the forward saves each layer's stacked input
+    activations, and the backward re-linearises one layer at a time
+    (recomputing that layer's forward — same primitives, same inputs, same
+    bits) so ``on_bucket(bucket, {layer: dp_stacked})`` can issue that
+    bucket's exchange collective while the remaining layers' backward is
+    still to run.  ``on_bucket`` returns an ordering token (or None); the
+    token is tied into the downstream cotangent WITHOUT changing its value
+    (``core/chaos.py::delay_tie``), pinning the collective's issue point
+    into the backward walk so XLA cannot sink it to the end of the step.
+    """
+    from repro.core.chaos import delay_tie
+    uk = _use_kernel(cfg, use_kernel)
+    buckets = {b.name: b for b in bucket_spec(cfg)}
+    layers = _layer_fns(cfg, uk)
+    labels = shards["labels"]
+
+    xs = shards["images"]
+    acts = []  # per layer: the stacked (s, b, ...) INPUT activations
+    for name, fn in layers:
+        acts.append(xs)
+        if name is None:
+            xs = jax.lax.map(fn, xs)
+        else:
+            xs = jax.lax.map(lambda x, p=params[name], fn=fn: fn(p, x), xs)
+
+    if uk:
+        from repro.kernels import ops as kops
+
+    def loss_and_dy(args):
+        logits, lab = args
+
+        def loss_part(lg):
+            lg = lg.astype(jnp.float32)
+            if uk:
+                return jnp.mean(kops.softmax_xent(lg, lab))
+            lse = jax.nn.logsumexp(lg, axis=-1)
+            ll = jnp.take_along_axis(lg, lab[:, None], axis=-1)[:, 0]
+            return jnp.mean(lse - ll)
+
+        loss, vjp_loss = jax.vjp(loss_part, logits)
+        (dy,) = vjp_loss(jnp.ones((), loss.dtype))
+        lg32 = logits.astype(jnp.float32)
+        err = jnp.mean((jnp.argmax(lg32, -1) != lab).astype(jnp.float32))
+        return loss, err, dy
+
+    losses, errs, dy = jax.lax.map(loss_and_dy, (xs, labels))
+    metrics = {"ce": losses, "error_rate": errs,
+               "aux": jnp.zeros_like(losses)}
+
+    grads = {}
+    for (name, fn), x_in in zip(reversed(layers), reversed(acts)):
+        if name is None:
+            def bwd_pool(args, fn=fn):
+                x, g = args
+                _, vjp = jax.vjp(fn, x)
+                (dx,) = vjp(g)
+                return dx
+            dy = jax.lax.map(bwd_pool, (x_in, dy))
+            continue
+
+        def bwd_layer(args, fn=fn, p=params[name]):
+            x, g = args
+            _, vjp = jax.vjp(fn, p, x)
+            dp, dx = vjp(g)
+            return jax.tree.map(lambda t: t.astype(jnp.float32), dp), dx
+
+        dp, dy = jax.lax.map(bwd_layer, (x_in, dy))
+        grads[name] = dp
+        dy = delay_tie(dy, on_bucket(buckets[name], {name: dp}))
+    return losses, metrics, grads
+
+
 def loss_fn(params, batch, cfg: ArchConfig, use_kernel: bool | None = None):
     uk = _use_kernel(cfg, use_kernel)
     logits = forward(params, batch["images"], cfg, use_kernel=uk)

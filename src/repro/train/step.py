@@ -21,7 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.chaos import SyncConfig, gathered_shard_mean
+from repro.core.chaos import (SyncConfig, delay_gate, delay_start,
+                              gathered_shard_mean)
 from repro.core.schedule import make_lr_fn
 from repro.core.types import ArchConfig, WorkerConfig
 from repro.models import layers as ML
@@ -199,20 +200,31 @@ def _make_bucket_step(cfg: ArchConfig, sync: SyncConfig, strat, ops,
     production order) — any model family via its ``bucket_spec()`` (the
     CNN's walk is chained to each layer's VJP gradient production, through
     both the XLA and Pallas-kernel paths), any optimizer via per-bucket
-    state slicing, and it composes with the superstep scan unchanged."""
-    if cfg.micro_batches > 1:
-        raise NotImplementedError(
-            "sync.layerwise does not compose with micro-batch accumulation: "
-            "per-bucket updates would apply before later micro-batches' "
-            "gradients exist; run with cfg.micro_batches=1 (or drop "
-            "--layerwise)")
+    state slicing, and it composes with the superstep scan unchanged.
+
+    ``cfg.micro_batches > 1`` composes via the bucket-granular accumulator:
+    per-bucket gradients accumulate across the micro-shards (the shared
+    ``_make_grad_fn`` scan — bucket slices of one whole-tree accumulation),
+    then every bucket exchanges ONCE per step on its accumulated mean and
+    the per-bucket updates walk in the same reverse-production order.  A
+    per-bucket update cannot fire mid-accumulation (later micro-shards'
+    gradients would not exist yet), so the tape degrades to the
+    collect-then-walk schedule — numerics identical to the batched
+    micro-batch step bucket-by-bucket."""
     spec = ops.bucket_spec()
     ctx = StepContext(optimizer=optimizer)
+    n_micro = max(cfg.micro_batches, 1)
+    acc_grad_fn = _make_grad_fn(cfg, ops) if n_micro > 1 else None
 
     def step(state, batch):
         exchange_bucket, finish = strat.bucket_exchange(ctx, state["sync"],
                                                         state["step"])
-        if optimizer.pre_apply is None:
+        if n_micro > 1:
+            loss, metrics, grads = acc_grad_fn(state["params"], batch)
+            new_params, new_opt = _bucket_walk(
+                spec, optimizer, exchange_bucket, state["params"],
+                state["opt"], grads, state["step"])
+        elif optimizer.pre_apply is None:
             # true tape: each bucket's exchange + update fires inside the
             # backward walk, the moment that bucket's gradient is produced
             opt_box = [state["opt"]]
@@ -238,7 +250,8 @@ def _make_bucket_step(cfg: ArchConfig, sync: SyncConfig, strat, ops,
                 spec, optimizer, exchange_bucket, state["params"],
                 state["opt"], grads, state["step"])
         new_sync = finish(grads)
-        new_params = strat.boundary(ctx, new_params, state["step"])
+        new_params, new_sync = strat.boundary(ctx, new_params, new_sync,
+                                              state["step"])
         new_state = {"params": new_params, "opt": new_opt,
                      "sync": new_sync, "step": state["step"] + 1}
         return new_state, {**metrics, "loss": loss}
@@ -318,9 +331,13 @@ def make_worker_train_step(cfg: ArchConfig, sync: SyncConfig,
     # local reductions accumulate in f32 like gathered_shard_mean (identity
     # for the uncompressed f32 path; with per-shard bf16 compression the
     # stacks arrive bf16 and must not sum in bf16)
+    delay = sync.collective_delay_ns_per_byte
     ctx = StepContext(
         optimizer=optimizer, grad_fn=shard_grads,
-        combine=lambda t: gathered_shard_mean(t, axis, N, S),
+        # blocking delay injection (the synchronous-exchange model) lives
+        # here, at the gather; delay == 0 leaves the graph untouched
+        combine=lambda t: gathered_shard_mean(t, axis, N, S,
+                                              delay_ns_per_byte=delay),
         local_mean=lambda t: jax.tree.map(
             lambda x: jnp.sum(x.astype(jnp.float32), 0) / s_local, t),
         # sum * (1/S), NOT sum / S: gathered_shard_mean multiplies by the
@@ -332,14 +349,84 @@ def make_worker_train_step(cfg: ArchConfig, sync: SyncConfig,
         explicit_workers=True, axis=axis, n_workers=N)
 
     if sync.layerwise:
-        # per-bucket collectives (ROADMAP item, closed by the ParamBuckets
-        # redesign): gradients come stacked out of the per-shard lax.map,
-        # then every bucket runs its own gathered_shard_mean + update in
-        # reverse-production order — finer comm/compute interleave than one
-        # stacked whole-tree reduction, same per-leaf arithmetic (bit-exact
-        # to the batched update for bsp, any N dividing logical_shards)
         spec = ops.bucket_spec()
+        # interleaved schedule (DESIGN.md §8): fire each bucket's exchange
+        # collective the moment that layer's stacked gradient is produced
+        # during backprop, via the model's shard tape.  Needs a per-leaf
+        # optimizer (no whole-tree pre_apply — adamw's clip must see every
+        # exchanged bucket first); otherwise, and for families without a
+        # shard tape, fall back to collect-then-walk.  The tape restructures
+        # the backward into per-layer map bodies, which XLA:CPU canonicalises
+        # differently from the whole-chain body — gradients agree with
+        # collect-then-walk only to ~1 ulp, which is why interleave is
+        # opt-in and the bit-exactness pins ride the collect schedule.
+        interleave = (sync.interleave and ops.shard_bucket_grads is not None
+                      and optimizer.pre_apply is None)
+        if interleave:
+            # the interleaved walk places its own start/gate delay pairs, so
+            # its combine must not also blocking-inject
+            ctx_i = dataclasses.replace(
+                ctx, combine=lambda t: gathered_shard_mean(t, axis, N, S))
+            # static per-bucket gather cost: result bytes = logical_shards ×
+            # per-shard gradient bytes (bf16 on the compressed wire)
+            itemsize = 2 if sync.compress else 4
+            abstract = ops.abstract_params()
+            bucket_ms = {
+                b.name: S * sum(l.size * itemsize for l in
+                                jax.tree.leaves(b.view(abstract)))
+                * delay * 1e-6
+                for b in spec}
+            inject = delay > 0 and N > 1 and strat.bucket_exchange_gathers
 
+            def bucket_step(state, batch):
+                exchange_bucket, finish = strat.bucket_exchange(
+                    ctx_i, state["sync"], state["step"])
+                shards = jax.tree.map(
+                    lambda x: x.reshape((s_local, x.shape[0] // s_local)
+                                        + x.shape[1:]), batch)
+                exchanged = {}
+
+                def on_bucket(bucket, g_b):
+                    g_ex = exchange_bucket(bucket, g_b)
+                    # deadline stamped when this bucket's gradient exists =
+                    # the collective's issue point, mid-backward
+                    tok = (delay_start(g_b, bucket_ms[bucket.name])
+                           if inject else None)
+                    exchanged[bucket.name] = (g_ex, tok)
+                    return tok
+
+                losses, metrics, grads = ops.shard_bucket_grads(
+                    state["params"], shards, on_bucket)
+                # gates anchor on the LAST-produced gradient: each bucket
+                # sleeps only what remains of its deadline after the rest
+                # of the backward walk ran — latency hidden behind compute
+                anchor = grads[spec[0].name]
+                new_params = dict(state["params"])
+                new_opt = state["opt"]
+                for bucket in reversed(spec):
+                    g_ex, tok = exchanged[bucket.name]
+                    if tok is not None:
+                        g_ex = delay_gate(g_ex, tok, anchor)
+                    new_p_b, new_opt = _apply_bucket(
+                        optimizer, bucket, new_params, g_ex, new_opt,
+                        state["step"])
+                    new_params.update(new_p_b)
+                new_sync = finish(grads)
+                new_params, new_sync = strat.boundary(
+                    ctx_i, new_params, new_sync, state["step"])
+                return strat.finish_step(ctx_i, state, new_params, new_opt,
+                                         new_sync, losses, metrics)
+
+            return bucket_step
+
+        # collect-then-walk: gradients come stacked out of the per-shard
+        # lax.map, then every bucket runs its own gathered_shard_mean +
+        # update in reverse-production order — finer comm/compute
+        # interleave than one stacked whole-tree reduction, same per-leaf
+        # arithmetic (bit-exact to the batched update for bsp, any N
+        # dividing logical_shards); with delay injection each bucket's
+        # gather charge lands synchronously inside the walk (the baseline
+        # benchmarks/overlap.py measures the interleaved tape against)
         def bucket_step(state, batch):
             exchange_bucket, finish = strat.bucket_exchange(
                 ctx, state["sync"], state["step"])
@@ -348,7 +435,8 @@ def make_worker_train_step(cfg: ArchConfig, sync: SyncConfig,
                 spec, optimizer, exchange_bucket, state["params"],
                 state["opt"], grads, state["step"])
             new_sync = finish(grads)
-            new_params = strat.boundary(ctx, new_params, state["step"])
+            new_params, new_sync = strat.boundary(ctx, new_params, new_sync,
+                                                  state["step"])
             return strat.finish_step(ctx, state, new_params, new_opt, new_sync,
                                  losses, metrics)
 

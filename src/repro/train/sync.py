@@ -37,8 +37,10 @@ Protocol (one strategy instance per ``SyncConfig``):
                             (identity under implicit SPMD, the fixed-shape
                             gathered shard mean on the worker mesh)
 ``step(ctx, state, batch)`` the full train-step body (apply_update included)
-``boundary(ctx, params, step)``  end-of-step parameter hook (localsgd's
-                            K-step average; identity elsewhere)
+``boundary(ctx, params, sync_state, step) -> (params, sync_state)``
+                            end-of-step parameter hook (localsgd's K-step
+                            average / τ-ring stale correction; identity
+                            elsewhere)
 ``finish_step(ctx, state, new_params, new_opt, new_sync, losses, metrics)``
                             packs the step result: metric reduction
                             (``workers_identical`` strategies reduce with
@@ -90,7 +92,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.chaos import (SyncConfig, compress_grads, localsgd_average,
+from repro.core.chaos import (SyncConfig, compress_grads, delay_gate,
+                              delay_start, localsgd_average, tree_bytes,
                               zeros_like_f32)
 
 STRATEGIES: dict[str, type] = {}
@@ -233,6 +236,10 @@ class BspStrategy:
     name = "bsp"
     stacked_state = False     # worker mesh: state replicated
     workers_identical = True  # metrics reduce with the same fixed-shape mean
+    #: whether the per-bucket exchange runs a mesh collective (drives the
+    #: interleaved schedule's per-bucket delay injection — localsgd's
+    #: exchange is purely local, so it must not be charged gather latency)
+    bucket_exchange_gathers = True
 
     def __init__(self, sync: SyncConfig):
         self.sync = sync
@@ -323,8 +330,15 @@ class BspStrategy:
     def _reduce(self, ctx: StepContext, grads):
         return ctx.combine(grads)
 
-    def boundary(self, ctx: StepContext, params, step):
-        return params
+    def _ring_dtype(self):
+        return (jnp.dtype(self.sync.ring_dtype)
+                if self.sync.ring_dtype else None)
+
+    def boundary(self, ctx: StepContext, params, sync_state, step):
+        """K-boundary hook, after the optimizer applied this step's update.
+        Returns ``(params, sync_state)`` — strategies whose boundary carries
+        state (localsgd's τ-ring of stale corrections) thread it here."""
+        return params, sync_state
 
     # -- the step body ---------------------------------------------------
     def step(self, ctx: StepContext, state, batch):
@@ -333,7 +347,8 @@ class BspStrategy:
         g = self._reduce(ctx, grads)
         new_params, new_opt = ctx.optimizer.apply(
             state["params"], g, state["opt"], state["step"])
-        new_params = self.boundary(ctx, new_params, state["step"])
+        new_params, new_sync = self.boundary(ctx, new_params, new_sync,
+                                             state["step"])
         return self.finish_step(ctx, state, new_params, new_opt, new_sync,
                             losses, metrics)
 
@@ -383,17 +398,109 @@ class BspStrategy:
 class LocalSGDStrategy(BspStrategy):
     """Paper strategy-C flavour: purely local gradients; parameters averaged
     over the worker axis every ``local_steps`` steps (workers diverge
-    between boundaries, so worker-mesh state is per-worker stacked)."""
+    between boundaries, so worker-mesh state is per-worker stacked).
+
+    τ-ring boundary (DESIGN.md §8): here ``SyncConfig.staleness`` counts
+    *boundaries*, not steps.  τ=0 is the blocking K-boundary average —
+    the historical ``localsgd_average`` code path verbatim, so it is
+    bit-exact to the pre-ring implementation by construction (no ring
+    state exists at τ=0; checkpoints are unchanged).  τ>=1 replaces the
+    blocking pmean with a τ-deep ring of stale *corrections*: at boundary
+    m each replica computes ``pmean(params) - params``, writes it into
+    ring slot m % τ, and applies the correction written at boundary m-τ
+    (zero for the first τ boundaries).  The pmean therefore gates only
+    the ring write — a step OUTPUT — never the boundary's own parameter
+    update, so the collective overlaps with the next K·τ local steps.
+    Corrections sum to zero across workers at write time, so the worker
+    MEAN evolves exactly as if no averaging happened — τ-staleness only
+    perturbs each replica's pull toward that shared mean trajectory.
+
+    With delay injection (``collective_delay_ns_per_byte`` > 0) a
+    per-slot deadline token rides the sync state: the all-reduce's
+    2×param-bytes charge is stamped at boundary m and slept off when the
+    slot is read back at boundary m+τ — after K·τ local steps of compute
+    the remainder is ~0, which is the measurable overlap win
+    (benchmarks/overlap.py) vs τ=0's full synchronous charge."""
 
     name = "localsgd"
     stacked_state = True
     workers_identical = False
+    bucket_exchange_gathers = False  # per-bucket reduce is purely local
+
+    def _tau(self) -> int:
+        return self.sync.staleness
+
+    def _has_tokens(self) -> bool:
+        return (self._tau() >= 1
+                and self.sync.collective_delay_ns_per_byte > 0)
+
+    def init_state(self, params) -> dict:
+        st = super().init_state(params)
+        if self._tau() >= 1:
+            st["lsring"] = init_ring(params, self._tau(), self._ring_dtype())
+            if self._has_tokens():
+                # zero deadlines are already in the past -> first reads
+                # sleep nothing (matches the zero corrections they gate)
+                st["lstok"] = jnp.zeros((self._tau(),), jnp.float32)
+        return st
+
+    def state_specs(self, pspecs) -> dict:
+        st = super().state_specs(pspecs)
+        if self._tau() >= 1:
+            st["lsring"] = {f"h{i}": pspecs for i in range(self._tau())}
+            if self._has_tokens():
+                st["lstok"] = P()
+        return st
+
+    def worker_sync_layout(self) -> dict:
+        layout = super().worker_sync_layout()
+        if self._tau() >= 1:
+            layout["lsring"] = "worker"
+            if self._has_tokens():
+                layout["lstok"] = "worker"
+        return layout
 
     def _reduce(self, ctx: StepContext, grads):
         return ctx.local_mean(grads)
 
-    def boundary(self, ctx: StepContext, params, step):
-        return localsgd_average(self.sync, params, step)
+    def boundary(self, ctx: StepContext, params, sync_state, step):
+        sync = self.sync
+        tau = self._tau()
+        delay = sync.collective_delay_ns_per_byte
+        if tau == 0:
+            return (localsgd_average(sync, params, step,
+                                     delay_ns_per_byte=delay), sync_state)
+        do_avg = ((step + 1) % sync.local_steps) == 0
+        # 0-based boundary index; only meaningful when do_avg (clamped so
+        # the ring arithmetic stays valid off-boundary, where every write
+        # and apply is select-disabled anyway)
+        m = jnp.maximum((step + 1) // sync.local_steps - 1, 0)
+        ring = sync_state["lsring"]
+        new_sync = dict(sync_state)
+        gated = "lstok" in sync_state and sync.axis_name is not None
+        stale = ring_read(ring, m, tau)
+        if gated:
+            # sleep whatever remains of the deadline stamped τ boundaries
+            # ago — K·τ local steps of compute have already eaten into it
+            stale = delay_gate(stale, sync_state["lstok"][m % tau], params)
+        new_params = jax.tree.map(
+            lambda p, s: jnp.where(do_avg, p + s.astype(p.dtype), p),
+            params, stale)
+        if sync.axis_name is not None:
+            avg = jax.tree.map(
+                lambda p: jax.lax.pmean(p, sync.axis_name), new_params)
+        else:
+            avg = new_params  # single instance: correction is exactly zero
+        corr = jax.tree.map(lambda a, p: a - p, avg, new_params)
+        written = ring_write(ring, m, tau, corr)
+        new_sync["lsring"] = jax.tree.map(
+            lambda w, h: jnp.where(do_avg, w, h), written, ring)
+        if gated:
+            ms = 2.0 * tree_bytes(params) * delay * 1e-6  # all-reduce: 2×
+            tok = delay_start(corr, jnp.where(do_avg, ms, 0.0))
+            new_sync["lstok"] = sync_state["lstok"].at[m % tau].set(
+                jnp.where(do_avg, tok, sync_state["lstok"][m % tau]))
+        return new_params, new_sync
 
 
 @register
@@ -426,10 +533,6 @@ class ChaosStrategy(BspStrategy):
         if self.sync.staleness == 0:
             return BspStrategy(self.sync)
         return self
-
-    def _ring_dtype(self):
-        return (jnp.dtype(self.sync.ring_dtype)
-                if self.sync.ring_dtype else None)
 
     def init_state(self, params) -> dict:
         # ring slots default to param dtype: gradients are produced in

@@ -200,6 +200,66 @@ def test_non_dividing_kill_target_clamps(tmp_path):
     assert "does not divide logical_shards=8" in log
 
 
+def test_probation_clock_resets_on_straggle_and_requests_readmit():
+    """ResizeController re-admission bookkeeping in isolation: a
+    straggler-reason shrink arms the probation window, a straggle during
+    probation resets it, and serving the full window issues a grow request
+    back to the pre-eviction worker count."""
+    from repro.launch.elastic import ResizeController
+
+    c = ResizeController(None, None, None, WorkerConfig(workers=2), None,
+                         readmit_after=2)
+    c._maybe_arm_probation(4, 2, "watchdog straggler verdict")
+    assert c._probation == (4, 2)
+    c.observe_boundary(False)
+    assert c._probation == (4, 1)
+    c.observe_boundary(True)                      # straggle -> full reset
+    assert c._probation == (4, 2)
+    c.observe_boundary(False)
+    c.observe_boundary(False)                     # window served
+    assert c._probation is None
+    assert c.take_pending() == (4, "straggler probation served")
+    # non-straggler shrinks (kill, signal) never arm probation
+    c._maybe_arm_probation(4, 2, "injected kill fault")
+    assert c._probation is None
+
+
+def test_stall_evict_then_probation_readmits(tmp_path):
+    """The re-admit round trip through the real driver: a transient
+    straggler is evicted (4 -> 2), then after --readmit-after clean
+    supersteps the probation clock re-admits it (2 -> 4) — both
+    transitions logged, and the bsp loss sequence stays bit-identical to
+    an uninterrupted run through BOTH resizes."""
+    out_json = str(tmp_path / "readmit.json")
+    env = dict(os.environ, PYTHONPATH=SRC,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4")
+    common = [sys.executable, "-m", "repro.launch.train", "--arch",
+              "chaos-small", "--steps", "20", "--superstep", "1",
+              "--workers", "4", "--logical-shards", "8", "--batch", "8",
+              "--sync", "bsp"]
+    base = subprocess.run(
+        common + ["--metrics-out", str(tmp_path / "base.json")],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert base.returncode == 0, base.stderr[-4000:]
+    out = subprocess.run(
+        common + ["--inject", "stall@13:ms=400", "--evict-stragglers",
+                  "--readmit-after", "2", "--metrics-out", out_json],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "[elastic] probation armed" in out.stdout
+    assert "[elastic] probation served" in out.stdout
+    with open(out_json) as f:
+        got = json.load(f)
+    with open(tmp_path / "base.json") as f:
+        base_metrics = json.load(f)
+    evict, readmit = got["resizes"]
+    assert (evict["from"], evict["to"]) == (4, 2)
+    assert (readmit["from"], readmit["to"]) == (2, 4)
+    assert readmit["path"] == "in-memory"
+    assert got["workers_final"] == 4
+    assert got["losses"] == base_metrics["losses"]
+
+
 def test_stall_trips_watchdog_and_evicts(tmp_path):
     """An injected straggler stall lands inside the watchdog's timed
     window; with --evict-stragglers the verdict becomes a membership event

@@ -1,0 +1,267 @@
+"""Overlap & collective-latency harness pins (DESIGN.md §8).
+
+The contracts:
+  * the deadline-based delay injection is VALUE-neutral and deterministic:
+    with ``collective_delay_ns_per_byte`` > 0 the trained state and logged
+    losses are bit-identical run-to-run, and for the τ-ring bit-identical
+    to the delay-off run (the gates add 0.0 and where-select ties only);
+  * the interleaved bucket schedule (``SyncConfig.interleave``) trains the
+    same model as collect-then-walk: losses/params agree to float tolerance
+    (NOT bit-exact — the per-layer tape changes XLA:CPU canonical forms by
+    ~1 ulp, which is why interleave is opt-in and the layerwise bit-exact
+    pins ride the collect schedule);
+  * τ-ring localsgd: τ=0 IS the blocking boundary pmean (worker-identical
+    params equal to the pre-boundary worker mean, bit-exact); τ>=1 shifts
+    the correction τ boundaries into the future — before the first
+    correction lands the trajectory is bit-equal to a never-averaging run,
+    the ring holds exactly ``pmean(params) - params``, and corrections
+    preserve the cross-worker mean;
+  * layerwise composes with ``cfg.micro_batches > 1`` via the
+    bucket-granular accumulator, bit-exact to the batched micro-batch
+    update for bsp+SGD;
+  * the injected charge matches the roofline collective model: measured
+    blocking exchange cost tracks ``parse_collectives(HLO).effective_bytes
+    × delay`` at two delay settings.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run_sub(code: str, n_dev: int = 4):
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={n_dev}",
+               PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+_SETUP = """
+    import jax, jax.numpy as jnp, numpy as np
+    import repro.configs as C
+    from repro.core.chaos import SyncConfig
+    from repro.core.types import WorkerConfig
+    from repro.data.mnist import make_dataset
+    from repro.data.pipeline import ImagePipeline
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.train import put_worker_sharded
+    from repro.train.step import (init_worker_state, make_optimizer,
+                                  make_worker_superstep)
+
+    cfg = C.get("chaos-small")
+    imgs, labels = make_dataset(128, seed=0)
+    pipe = ImagePipeline(imgs, labels, batch=8, sample_mode="queue")
+
+    def run(n, mode, tau=1, steps=4, K=2, layerwise=False, local_steps=2,
+            delay=0.0, interleave=False):
+        worker = WorkerConfig(workers=n)
+        mesh = make_host_mesh(n)
+        sync = SyncConfig(mode, staleness=tau, axis_name=worker.axis,
+                          layerwise=layerwise, local_steps=local_steps,
+                          collective_delay_ns_per_byte=delay,
+                          interleave=interleave)
+        opt = make_optimizer(cfg, total_steps=64)
+        fn = make_worker_superstep(cfg, sync, worker, mesh, opt)
+        state = init_worker_state(cfg, jax.random.key(0), sync, worker, opt)
+        losses = []
+        for s in range(0, steps, K):
+            state, m = fn(state, put_worker_sharded(pipe, s, K, mesh,
+                                                    worker))
+            losses.extend(np.asarray(m["loss"]).tolist())
+        return jax.tree.map(np.asarray, state), losses
+
+    def leaves(t):
+        return [np.asarray(l) for l in jax.tree.leaves(t)]
+"""
+
+
+def test_interleave_delay_deterministic_and_allclose_vs_collect():
+    """Injected-delay determinism (run-to-run bit-identical) and the
+    interleaved tape's agreement with collect-then-walk: losses match to
+    float tolerance over 4 steps (the ~1-ulp per-step canonicalisation gap
+    compounds through training but stays tiny at this horizon)."""
+    out = _run_sub(_SETUP + """
+    a, la = run(2, "bsp", layerwise=True, delay=100.0, interleave=True)
+    b, lb = run(2, "bsp", layerwise=True, delay=100.0, interleave=True)
+    for x, y in zip(leaves(a), leaves(b)):
+        np.testing.assert_array_equal(x, y, err_msg="interleave+delay "
+                                      "must be deterministic")
+    np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+    c, lc = run(2, "bsp", layerwise=True, delay=100.0, interleave=False)
+    np.testing.assert_allclose(np.asarray(la), np.asarray(lc),
+                               rtol=1e-4, atol=1e-6,
+                               err_msg="interleave vs collect losses")
+    for x, y in zip(leaves(a["params"]), leaves(c["params"])):
+        np.testing.assert_allclose(x, y, rtol=1e-3, atol=1e-5,
+                                   err_msg="interleave vs collect params")
+    print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_localsgd_tau0_is_blocking_boundary_pmean():
+    """τ=0 degenerates to the historical blocking boundary average: after
+    the K-step boundary every worker holds the pre-boundary worker MEAN
+    (computed here from a never-averaging run of the same trajectory)."""
+    out = _run_sub(_SETUP + """
+    # local_steps=64 -> no boundary inside 2 steps: the pure-local params
+    local, _ = run(2, "localsgd", tau=0, steps=2, local_steps=64)
+    avg, _ = run(2, "localsgd", tau=0, steps=2, local_steps=2)
+    for p_l, p_a in zip(leaves(local["params"]), leaves(avg["params"])):
+        np.testing.assert_array_equal(p_a[0], p_a[1],
+                                      err_msg="post-boundary params must "
+                                      "be worker-identical")
+        np.testing.assert_allclose(p_a[0], np.mean(p_l, axis=0),
+                                   rtol=0, atol=1e-7,
+                                   err_msg="boundary pmean")
+    print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_localsgd_tau_ring_staleness_shift_and_mean_preservation():
+    """τ=1: the first boundary applies the zero-initialised slot (params
+    bit-equal the never-averaging run) while writing exactly
+    ``pmean(params) - params`` into the ring; the second boundary applies
+    that stale correction — params leave the local trajectory but the
+    cross-worker mean is preserved (corrections sum to zero)."""
+    out = _run_sub(_SETUP + """
+    local2, _ = run(2, "localsgd", tau=1, steps=2, local_steps=64)
+    ring2, _ = run(2, "localsgd", tau=1, steps=2, local_steps=2)
+    mean2 = [np.mean(p, axis=0) for p in leaves(local2["params"])]
+    for p_l, p_r, m, h in zip(leaves(local2["params"]),
+                              leaves(ring2["params"]), mean2,
+                              leaves(ring2["sync"]["lsring"]["h0"])):
+        np.testing.assert_array_equal(p_r, p_l,
+                                      err_msg="first boundary must be the "
+                                      "identity on params (stale slot 0)")
+        np.testing.assert_allclose(h, m[None] - p_l, rtol=0, atol=1e-7,
+                                   err_msg="ring slot = pmean - params")
+
+    local4, _ = run(2, "localsgd", tau=1, steps=4, local_steps=64)
+    ring4, _ = run(2, "localsgd", tau=1, steps=4, local_steps=2)
+    diverged = any(not np.array_equal(a, b) for a, b in
+                   zip(leaves(local4["params"]), leaves(ring4["params"])))
+    assert diverged, "second boundary must apply a nonzero correction"
+    for p_l, p_r in zip(leaves(local4["params"]), leaves(ring4["params"])):
+        np.testing.assert_allclose(np.mean(p_r, axis=0),
+                                   np.mean(p_l, axis=0),
+                                   rtol=0, atol=1e-6,
+                                   err_msg="corrections must preserve the "
+                                   "cross-worker mean")
+    print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_localsgd_tau_ring_delay_value_neutral():
+    """The τ-ring's deadline tokens change timing only: params and losses
+    with ``collective_delay_ns_per_byte`` > 0 are bit-identical to the
+    delay-off run (the token state itself differs, so compare content)."""
+    out = _run_sub(_SETUP + """
+    off, l_off = run(2, "localsgd", tau=1, steps=4, local_steps=2)
+    on, l_on = run(2, "localsgd", tau=1, steps=4, local_steps=2,
+                   delay=200.0)
+    np.testing.assert_array_equal(np.asarray(l_off), np.asarray(l_on))
+    for k in ("params", "opt"):
+        for x, y in zip(leaves(off[k]), leaves(on[k])):
+            np.testing.assert_array_equal(x, y, err_msg=k)
+    for x, y in zip(leaves(off["sync"]["lsring"]),
+                    leaves(on["sync"]["lsring"])):
+        np.testing.assert_array_equal(x, y, err_msg="lsring")
+    assert "lstok" in on["sync"] and "lstok" not in off["sync"]
+    print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_layerwise_microbatch_bitexact_vs_batched():
+    """The bucket-granular micro-batch accumulator: layerwise bsp+SGD with
+    cfg.micro_batches=2 is bit-exact to the batched micro-batch update
+    (single path), extending the layerwise bit-exactness pin to n_micro>1.
+    """
+    import dataclasses
+
+    import repro.configs as C
+    from repro.core.chaos import SyncConfig
+    from repro.data.mnist import make_dataset
+    from repro.data.pipeline import ImagePipeline
+    from repro.train.step import (init_train_state, make_optimizer,
+                                  make_train_step)
+
+    cfg = dataclasses.replace(C.get("chaos-small"), micro_batches=2)
+    imgs, labels = make_dataset(64, seed=0)
+    pipe = ImagePipeline(imgs, labels, batch=8, sample_mode="queue")
+    states = {}
+    for layerwise in (False, True):
+        sync = SyncConfig("bsp", layerwise=layerwise)
+        opt = make_optimizer(cfg, total_steps=8)
+        fn = jax.jit(make_train_step(cfg, sync, opt))
+        state = init_train_state(cfg, jax.random.key(0), sync, opt)
+        for t in range(2):
+            state, metrics = fn(state, pipe.batch_at(t))
+        states[layerwise] = (state, float(metrics["loss"]))
+    assert np.isfinite(states[True][1])
+    assert states[True][1] == states[False][1]
+    for a, b in zip(jax.tree.leaves(states[False][0]),
+                    jax.tree.leaves(states[True][0])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg="layerwise micro-batch must "
+                                      "be bit-exact vs batched")
+
+
+def test_roofline_crosscheck_injected_exchange_cost():
+    """The injected charge is the roofline collective model made wall-clock
+    real: on the blocking schedule, measured exchange cost (delay-on minus
+    delay-off us/step) tracks ``parse_collectives(HLO).effective_bytes ×
+    delay`` at two delays.  Tolerance is generous — callback dispatch and
+    shared-core scheduling ride on top of the charge — but tight enough to
+    catch a wrong bytes model (factor-2 errors)."""
+    out = _run_sub(_SETUP + """
+    import time
+    from repro.core.roofline import parse_collectives
+    from repro.train.step import make_optimizer as _mk
+
+    def wall(delay):
+        worker = WorkerConfig(workers=2)
+        mesh = make_host_mesh(2)
+        sync = SyncConfig("bsp", layerwise=True, axis_name=worker.axis,
+                          collective_delay_ns_per_byte=delay)
+        opt = _mk(cfg, total_steps=64)
+        fn = make_worker_superstep(cfg, sync, worker, mesh, opt)
+        state = init_worker_state(cfg, jax.random.key(0), sync, worker,
+                                  opt)
+        batches = [put_worker_sharded(pipe, i * 4, 4, mesh, worker)
+                   for i in range(3)]
+        eff = parse_collectives(
+            fn.lower(state, batches[0]).compile().as_text()).effective_bytes
+        state, m = fn(state, batches[0])           # compile+warm, untimed
+        jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        for b in batches[1:]:
+            state, m = fn(state, b)
+            jax.block_until_ready(m["loss"])
+        return (time.perf_counter() - t0) / 8 * 1e6, eff
+
+    base, eff = wall(0.0)
+    assert eff > 0
+    for delay in (400.0, 800.0):
+        us, _ = wall(delay)
+        measured = us - base
+        predicted = eff * delay * 1e-3
+        ratio = measured / predicted
+        assert 0.4 < ratio < 2.5, (delay, measured, predicted, ratio)
+        print(f"delay={delay}: ratio={ratio:.2f}")
+    print("OK")
+    """)
+    assert "OK" in out

@@ -33,12 +33,12 @@ def _assert_states_bitexact(s1, s2, msg=""):
                                       err_msg=msg)
 
 
-def _cnn_setup(mode, use_kernel=False, local_steps=2):
+def _cnn_setup(mode, use_kernel=False, local_steps=2, staleness=1):
     import dataclasses
     cfg = C.get("chaos-small")
     if use_kernel:
         cfg = dataclasses.replace(cfg, use_kernel=True)
-    sync = SyncConfig(mode, local_steps=local_steps)
+    sync = SyncConfig(mode, local_steps=local_steps, staleness=staleness)
     opt = make_optimizer(cfg, total_steps=8)
     imgs, labels = make_dataset(128, seed=0)
     pipe = ImagePipeline(imgs, labels, batch=8)
@@ -100,10 +100,13 @@ def test_superstep_bitexact_lm_adamw(mode):
 
 
 def test_localsgd_boundary_derives_from_step_carry():
-    """localsgd adds NO extra sync state: its K-boundary derives from the
-    scan-carried step counter, and on a single replica (average == identity)
-    it must match bsp bit-for-bit across boundary and non-boundary steps."""
-    cfg, sync, opt, pipe = _cnn_setup("localsgd", local_steps=3)
+    """localsgd τ=0 (the blocking boundary average; τ defaults to 1 = the
+    τ-ring since the overlap PR) adds NO extra sync state: its K-boundary
+    derives from the scan-carried step counter, and on a single replica
+    (average == identity) it must match bsp bit-for-bit across boundary
+    and non-boundary steps."""
+    cfg, sync, opt, pipe = _cnn_setup("localsgd", local_steps=3,
+                                      staleness=0)
     state = init_train_state(cfg, jax.random.key(0), sync, opt)
     assert state["sync"] == {}
     super_fn = jax.jit(make_superstep(cfg, sync, opt))

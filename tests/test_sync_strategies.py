@@ -488,12 +488,12 @@ def test_compress_worker_mesh_bitexact_across_worker_counts():
     assert "OK" in out
 
 
-def test_layerwise_guards_lifted_except_microbatch():
+def test_layerwise_guards_lifted():
     """The ParamBuckets redesign lifted the CNN-only / stateless-SGD-only /
-    no-compression / no-worker-mesh layerwise guards: those combos now
-    BUILD.  The one genuinely unsupported combo — micro-batch accumulation
-    (per-bucket updates can't apply before later micro-batches' gradients
-    exist) — fails with an actionable error."""
+    no-compression / no-worker-mesh layerwise guards, and the overlap PR
+    lifted the last one — micro-batch accumulation.  Every combo now
+    BUILDS, and the micro-batch combo trains (numerics pinned against the
+    batched path in test_overlap.py)."""
     import dataclasses
 
     from repro.core.types import WorkerConfig
@@ -510,5 +510,10 @@ def test_layerwise_guards_lifted_except_microbatch():
     make_worker_train_step(cfg, lw, WorkerConfig(workers=1))
 
     micro = dataclasses.replace(cfg, micro_batches=2)
-    with pytest.raises(NotImplementedError, match="micro-batch"):
-        make_train_step(micro, lw, sgd(lambda s: 1e-3))
+    opt = sgd(lambda s: 1e-3)
+    step_fn = jax.jit(make_train_step(micro, lw, opt))
+    _, pipe = _cnn()
+    state = init_train_state(micro, jax.random.key(0), lw, opt)
+    state, metrics = step_fn(state, pipe.batch_at(0))
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(state["step"]) == 1

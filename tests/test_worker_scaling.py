@@ -54,11 +54,16 @@ _SETUP = """
     imgs, labels = make_dataset(128, seed=0)
     pipe = ImagePipeline(imgs, labels, batch=8, sample_mode="queue")
 
-    def build(n, mode, opt=None, local_steps=2, cfg=cfg):
+    def build(n, mode, opt=None, local_steps=2, cfg=cfg, staleness=None):
         worker = WorkerConfig(workers=n)
         mesh = make_host_mesh(n)
+        if staleness is None:
+            # localsgd's staleness picks the tau-ring depth since the
+            # overlap PR; these pins cover the classic blocking boundary
+            # average, so tau=0 unless a test opts in
+            staleness = 0 if mode == "localsgd" else 1
         sync = SyncConfig(mode, local_steps=local_steps,
-                          axis_name=worker.axis)
+                          axis_name=worker.axis, staleness=staleness)
         opt = opt or make_optimizer(cfg, total_steps=64)
         fn = make_worker_superstep(cfg, sync, worker, mesh, opt)
         state = init_worker_state(cfg, jax.random.key(0), sync, worker, opt)
