@@ -504,13 +504,34 @@ def bench_roofline(quick=False):
 
 
 # ---------------------------------------------------------------------------
-# Serving throughput (smoke-scale)
+# Serving: continuous batching under a Poisson trace (DESIGN.md §9)
 # ---------------------------------------------------------------------------
-def bench_serving(quick=False):
-    from repro.launch.serve import serve
-    t0 = time.time()
-    serve("rwkv6-1.6b", batch=2, prompt_len=8, gen=8, max_seq=24)
-    row("serve/rwkv6-smoke", (time.time() - t0) * 1e6, "see_tok_per_s_above")
+def bench_serve(quick=False):
+    import subprocess
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(os.path.dirname(__file__), "..", "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    cmd = [sys.executable, "-m", "benchmarks.serve"]
+    if quick:
+        cmd.append("--quick")
+    out = subprocess.run(cmd, stdout=subprocess.PIPE, text=True, env=env,
+                         cwd=os.path.join(os.path.dirname(__file__), ".."),
+                         timeout=7200)
+    if out.returncode != 0:
+        raise RuntimeError(f"benchmarks.serve failed rc={out.returncode}")
+    doc = json.loads(out.stdout)
+    for r in doc["runs"]:
+        row(f"serve/{r['arch']}/{r['mode']}",
+            r["p50_token_latency_s"] * 1e6,
+            f"tok_per_s={r['tokens_per_s']:.1f}"
+            f"_p99_ms={r['p99_token_latency_s'] * 1e3:.1f}"
+            + (f"_speedup_vs_loop=x{r['prefill_speedup_vs_loop']:.2f}"
+               if "prefill_speedup_vs_loop" in r else ""))
+    for arch, rl in doc.get("roofline", {}).items():
+        row(f"serve/{arch}/roofline", rl["decode_bound_s"] * 1e6,
+            f"dom={rl['dominant']}_measured_over_bound="
+            f"{rl['measured_over_bound']:.0f}x")
+    return doc
 
 
 def _write_section_json(out_dir, section, rows, extra, quick):
@@ -544,7 +565,7 @@ SECTIONS = {
     "overlap": bench_overlap,
     "elastic": bench_elastic,
     "roofline": bench_roofline,
-    "serving": bench_serving,
+    "serve": bench_serve,
 }
 
 

@@ -1,6 +1,7 @@
-"""Batched serving example: prefill + decode with KV/state caches across
-three different architecture families (dense GQA, MLA compressed cache,
-attention-free RWKV state).
+"""Serving example across three architecture families (dense GQA, MLA
+compressed cache, attention-free RWKV state): a static batch through the
+batched-prefill path, then a continuous-batching run under a seeded
+Poisson trace (DESIGN.md §9).
 
     PYTHONPATH=src python examples/serve_decode.py
 """
@@ -9,9 +10,17 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.launch.serve import serve
+from repro.launch.serve import serve, serve_trace
 
 if __name__ == "__main__":
     for arch in ("qwen3-14b", "minicpm3-4b", "rwkv6-1.6b"):
         print(f"== {arch} (reduced config) ==")
         serve(arch, batch=2, prompt_len=12, gen=12, max_seq=32)
+    print("== continuous batching (qwen3-14b, Poisson trace) ==")
+    finished, counters, times = serve_trace(
+        "qwen3-14b", slots=2, requests=4, rate=1.0, prompt_lens=(4, 10),
+        gen=6, max_seq=32)
+    toks = sum(f.prompt_len + len(f.tokens) for f in finished)
+    print(f"finished {len(finished)} requests, {toks} tokens; dispatches: "
+          f"{counters['prefill_dispatch']} prefill + "
+          f"{counters['decode_dispatch']} decode")

@@ -152,6 +152,8 @@ def analyze(compiled, *, n_devices: int, model_flops_total: float = 0.0):
     FLOPs/bytes are per-device quantities already.
     """
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):    # older jax: one dict per program
+        ca = ca[0] if ca else {}
     flops = float(ca.get("flops", 0.0))
     bytes_acc = float(ca.get("bytes accessed", 0.0))
     hlo = compiled.as_text()

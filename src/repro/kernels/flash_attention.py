@@ -33,11 +33,12 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+def _fa_kernel(off_ref, q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
                scale: float, causal: bool, block_q: int, block_k: int,
                n_kv: int, seq_len: int):
     qi = pl.program_id(2)
     ki = pl.program_id(3)
+    q_off = off_ref[0, 0]
 
     @pl.when(ki == 0)
     def _init():
@@ -51,7 +52,11 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
         v = v_ref[0, 0].astype(jnp.float32)      # (bk, Dv)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
-        q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        # absolute query position: queries live at cache positions
+        # [q_off, q_off + Tq) — the causal frontier of a continued sequence
+        # sits at q_off + row, NOT at row (the pre-fix bug: a batched
+        # prefill starting mid-cache masked every cached key as "future")
+        q_pos = q_off + qi * block_q + jax.lax.broadcasted_iota(
             jnp.int32, (block_q, block_k), 0)
         k_pos = ki * block_k + jax.lax.broadcasted_iota(
             jnp.int32, (block_q, block_k), 1)
@@ -74,8 +79,9 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
         l_sc[...] = l_new
 
     if causal:
-        # skip fully-masked kv blocks (block start beyond q block end)
-        @pl.when(ki * block_k <= qi * block_q + block_q - 1)
+        # skip fully-masked kv blocks (block start beyond q block end,
+        # measured at the ABSOLUTE query position q_off + row)
+        @pl.when(ki * block_k <= q_off + qi * block_q + block_q - 1)
         def _():
             compute()
     else:
@@ -88,17 +94,24 @@ def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
         o_ref[0, 0] = (acc_sc[...] / l[:, None]).astype(o_ref.dtype)
 
 
-def flash_attention_fwd(q, k, v, *, causal: bool = True,
+def flash_attention_fwd(q, k, v, *, causal: bool = True, q_offset=0,
                         softmax_scale=None, block_q: int = 512,
                         block_k: int = 512, interpret: bool = True):
     """q: (B, Hq, Tq, D); k, v: (B, Hkv, Tk, D/Dv) — GQA by head grouping.
-    Returns (B, Hq, Tq, Dv)."""
+    Returns (B, Hq, Tq, Dv).
+
+    ``q_offset`` (python int or traced int32 scalar) is the absolute cache
+    position of query row 0: the causal mask admits ``k_pos <= q_offset +
+    row``, matching ``models/layers.py::flash_attention``.  It rides into
+    the kernel as a (1, 1) SMEM scalar, so a traced offset does not change
+    compiled shapes (one program serves every cache position)."""
     B, Hq, Tq, D = q.shape
     Hkv, Tk, Dv = k.shape[1], k.shape[2], v.shape[3]
     G = Hq // Hkv
     scale = softmax_scale if softmax_scale is not None else 1 / math.sqrt(D)
     block_q = min(block_q, Tq)
     block_k = min(block_k, Tk)
+    off = jnp.asarray(q_offset, jnp.int32).reshape(1, 1)
 
     pad_q = (-Tq) % block_q
     pad_k = (-Tk) % block_k
@@ -122,6 +135,8 @@ def flash_attention_fwd(q, k, v, *, causal: bool = True,
             kern,
             grid=(B, Hkv, nq, nk),
             in_specs=[
+                pl.BlockSpec((1, 1), lambda b, h, i, j: (0, 0),
+                             memory_space=pltpu.SMEM),
                 pl.BlockSpec((1, 1, block_q, D),
                              lambda b, h, i, j: (b, h, i, 0)),
                 pl.BlockSpec((1, 1, block_k, D),
@@ -138,7 +153,7 @@ def flash_attention_fwd(q, k, v, *, causal: bool = True,
                 pltpu.VMEM((block_q, Dv), jnp.float32),
             ],
             interpret=interpret,
-        )(qg, k, v)
+        )(off, qg, k, v)
 
     outs = [one_group(qf[:, :, g]) for g in range(G)]
     out = jnp.stack(outs, axis=2).reshape(B, Hq, Tq + pad_q, Dv)

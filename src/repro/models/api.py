@@ -10,6 +10,7 @@
         params, batch, tape=on_bucket)             # reverse-production tape
     cache  = ops.init_cache(batch_size, max_seq)   # decode families
     logits, cache = ops.decode(params, cache, tokens, cache_len)
+    logits, cache = ops.prefill(params, cache, tokens, lengths, cache_len)
 
 ParamBuckets (DESIGN.md §6): ``bucket_spec()`` partitions the param tree
 into ordered, disjoint per-layer buckets — the granularity at which the
@@ -47,6 +48,11 @@ class ModelOps:
     abstract_cache: Optional[Callable] = None
     cache_specs: Optional[Callable] = None
     decode: Optional[Callable] = None
+    #: batched prefill (DESIGN.md §9): whole right-padded prompts in one
+    #: dispatch.  ``prefill(params, cache, tokens, lengths, cache_len)`` —
+    #: ``tokens`` (B, T), ``lengths`` (B,) true prompt lengths; row i's
+    #: next-token logits live at position lengths[i]-1.
+    prefill: Optional[Callable] = None
     forward: Optional[Callable] = None
     #: worker-mesh interleaved tape (DESIGN.md §8), families that have one:
     #: ``shard_bucket_grads(params, shards, on_bucket) -> (losses, metrics,
@@ -164,6 +170,12 @@ def get_ops(cfg: ArchConfig) -> ModelOps:
             cfg, b, s, L.ShapeFactory(cache_dtype))
         ops.cache_specs = lambda b, s: mod.init_cache(
             cfg, b, s, L.SpecFactory())
-        ops.decode = lambda params, cache, tokens, cache_len: mod.decode_step(
-            params, cache, tokens, cache_len, cfg)
+        ops.decode = (
+            lambda params, cache, tokens, cache_len, **kw: mod.decode_step(
+                params, cache, tokens, cache_len, cfg, **kw))
+    if hasattr(mod, "prefill_step"):
+        ops.prefill = (
+            lambda params, cache, tokens, lengths, cache_len, **kw:
+            mod.prefill_step(params, cache, tokens, lengths, cache_len,
+                             cfg, **kw))
     return ops

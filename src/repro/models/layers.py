@@ -136,14 +136,31 @@ def _blocks(k, block_k):
 
 
 def _block_mask(start, block_k, q_pos, Tk, causal, pad):
+    """q_pos: (Tq,) shared positions, or (B, Tq) per-row positions (the
+    serving path: one decode dispatch over cache slots at different write
+    cursors).  Returns (Tq, bk) or (B, Tq, bk)."""
     k_pos = start + jnp.arange(block_k)
     if causal:
-        mask = k_pos[None, :] <= q_pos[:, None]
+        mask = k_pos <= q_pos[..., :, None]
     else:
-        mask = jnp.ones((q_pos.shape[0], block_k), bool)
+        mask = jnp.ones(q_pos.shape + (block_k,), bool)
     if pad:
-        mask = mask & (k_pos[None, :] < Tk)
+        mask = mask & (k_pos < Tk)
     return mask
+
+
+def _expand_mask(mask):
+    """Broadcast a (Tq, bk) / (B, Tq, bk) block mask against score blocks
+    of shape (B, Hkv, G, Tq, bk)."""
+    return mask[None, None, None] if mask.ndim == 2 else mask[:, None, None]
+
+
+def _q_positions(q_offset, Tq):
+    """Absolute query positions: (Tq,) for a shared int/scalar offset,
+    (B, Tq) for a per-row offset vector."""
+    if getattr(q_offset, "ndim", 0):
+        return jnp.asarray(q_offset, jnp.int32)[:, None] + jnp.arange(Tq)
+    return q_offset + jnp.arange(Tq)
 
 
 def _loop(body, carry, xs_blocks, starts, n_blocks):
@@ -173,18 +190,19 @@ def _flash_fwd_impl(q, k, v, causal, q_offset, block_k, scale):
     kb, n_blocks, pad = _blocks(k, block_k)
     vb, _, _ = _blocks(v, block_k)
     qg = q.reshape(B, Tq, Hkv, G, D)
-    q_pos = q_offset + jnp.arange(Tq)
+    q_pos = _q_positions(q_offset, Tq)
 
     def body(carry, blk):
         m, l, acc = carry
         kblk, vblk, start = blk
         s = jnp.einsum("bthgd,bshd->bhgts", qg, kblk,
                        preferred_element_type=jnp.float32) * scale
-        mask = _block_mask(start, block_k, q_pos, Tk, causal, pad)
-        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        mask = _expand_mask(_block_mask(start, block_k, q_pos, Tk, causal,
+                                        pad))
+        s = jnp.where(mask, s, -jnp.inf)
         m_new = jnp.maximum(m, s.max(axis=-1))
         safe_m = jnp.where(jnp.isinf(m_new), 0.0, m_new)
-        p = jnp.exp(s - safe_m[..., None]) * mask[None, None, None]
+        p = jnp.exp(s - safe_m[..., None]) * mask
         corr = jnp.exp(m - safe_m)  # m=-inf rows -> corr 0 (safe_m finite)
         l_new = l * corr + p.sum(axis=-1)
         pv = jnp.einsum("bhgts,bshd->bhgtd", p.astype(vblk.dtype), vblk,
@@ -218,7 +236,7 @@ def _flash_bwd(causal, q_offset, block_k, scale, res, dout):
     kb, n_blocks, pad = _blocks(k, block_k)
     vb, _, _ = _blocks(v, block_k)
     qg = q.reshape(B, Tq, Hkv, G, D).astype(jnp.float32)
-    q_pos = q_offset + jnp.arange(Tq)
+    q_pos = _q_positions(q_offset, Tq)
     dog = dout.reshape(B, Tq, Hkv, G, Dv).astype(jnp.float32)
     og = out.reshape(B, Tq, Hkv, G, Dv).astype(jnp.float32)
     # D_i = sum_d do_i * o_i   (B,Hkv,G,Tq)
@@ -229,10 +247,11 @@ def _flash_bwd(causal, q_offset, block_k, scale, res, dout):
         kf, vf = kblk.astype(jnp.float32), vblk.astype(jnp.float32)
         s = jnp.einsum("bthgd,bshd->bhgts", qg, kf,
                        preferred_element_type=jnp.float32) * scale
-        mask = _block_mask(start, block_k, q_pos, Tk, causal, pad)
+        mask = _expand_mask(_block_mask(start, block_k, q_pos, Tk, causal,
+                                        pad))
         # mask BEFORE exp: a masked score above lse would overflow and
         # poison the 0-mask product with NaN
-        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        s = jnp.where(mask, s, -jnp.inf)
         p = jnp.exp(s - lse[..., None])
         dv_blk = jnp.einsum("bhgts,bthgd->bshd", p, dog)
         dp = jnp.einsum("bthgd,bshd->bhgts", dog, vf)
@@ -268,10 +287,22 @@ def flash_attention(q, k, v, *, causal: bool, q_offset: int = 0,
     recomputed in the backward pass, so memory is O(T) not O(T^2).
 
     q, k: (B, T, H, D); v: (B, Tk, Hkv, Dv).  GQA via head grouping;
-    supports Dv != D (MLA)."""
+    supports Dv != D (MLA).
+
+    ``q_offset`` is the absolute cache position of query row 0 (causal mask
+    admits ``k_pos <= q_offset + row``): a python int (training / static
+    prefill — differentiable via the flash custom VJP), a traced int32
+    scalar (batched prefill of a continued sequence at a dynamic cache
+    position), or a (B,) int32 vector (one serving decode dispatch over
+    cache slots at different write cursors).  Non-int offsets take the
+    forward-only path — a traced value cannot ride custom_vjp
+    nondiff_argnums, and the serving paths never differentiate."""
     D = q.shape[-1]
     scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
-    return _flash(q, k, v, causal, q_offset, block_k, scale)
+    if isinstance(q_offset, int):
+        return _flash(q, k, v, causal, q_offset, block_k, scale)
+    out, _ = _flash_fwd_impl(q, k, v, causal, q_offset, block_k, scale)
+    return out
 
 
 def decode_attention(q, k_cache, v_cache, cache_len, *,

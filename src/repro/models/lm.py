@@ -11,10 +11,44 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.types import ArchConfig, ParamBucket
 from repro.models import layers as L
 from repro.train.sharding import constrain
+
+
+def _cache_write(buf, new, cache_len, T):
+    """Write ``new`` (B, T, ...) into cache ``buf`` (B, S, ...) starting at
+    ``cache_len``: a shared scalar start uses dynamic_update_slice (the
+    single-sequence / uniform-prefill path), a (B,) cursor vector scatters
+    each row at its own position (one serving decode dispatch over slots
+    whose sequences are at different lengths)."""
+    cl = jnp.asarray(cache_len, jnp.int32)
+    if cl.ndim:
+        rows = jnp.arange(buf.shape[0])[:, None]
+        idx = cl[:, None] + jnp.arange(T)[None, :]
+        return buf.at[rows, idx].set(new.astype(buf.dtype))
+    start = (0, cl) + (0,) * (buf.ndim - 2)
+    return jax.lax.dynamic_update_slice(buf, new.astype(buf.dtype), start)
+
+
+def _check_capacity(cache_len, T, max_seq):
+    """Fail loudly instead of silently clamping: dynamic_update_slice
+    clamps out-of-range start indices, which would overwrite the LAST cache
+    position forever once a sequence hits max_seq.  Concrete (eager /
+    host-side) cache_len values are validated here; compiled dispatches are
+    validated by the serving driver before launch (a traced value cannot
+    raise)."""
+    if isinstance(cache_len, jax.core.Tracer):
+        return
+    hi = int(np.max(np.asarray(cache_len)))
+    if hi + T > max_seq:
+        raise ValueError(
+            f"KV-cache overflow: cache_len={hi} + {T} new token(s) exceeds "
+            f"max_seq={max_seq}; dynamic_update_slice would silently clamp "
+            f"and overwrite position {max_seq - 1}. Evict or re-admit the "
+            f"sequence with a larger max_seq (init_cache(batch, max_seq)).")
 
 
 # ---------------------------------------------------------------------------
@@ -122,8 +156,13 @@ def build_params(cfg: ArchConfig, f):
 # Forward pieces
 # ---------------------------------------------------------------------------
 def _gqa_attention(p, x, cfg: ArchConfig, positions, kv_cache=None,
-                   cache_len=None):
-    """Returns (out, new_kv) ; kv_cache: (k, v) each (B, S, Hkv, dh)."""
+                   cache_len=None, use_kernel: bool = False):
+    """Returns (out, new_kv) ; kv_cache: (k, v) each (B, S, Hkv, dh).
+
+    Cached attention runs causally at absolute offset ``cache_len``
+    (scalar: uniform prefill/decode; (B,) vector: per-slot serving decode)
+    through the same flash path for any T — so a T-token batched prefill
+    is bit-identical, row for row, to T single-token decode steps."""
     B, T, d = x.shape
     dh, Hq, Hkv = cfg.d_head, cfg.n_heads, cfg.n_kv_heads
     q = (x @ p["wq"]).reshape(B, T, Hq, dh)
@@ -140,12 +179,21 @@ def _gqa_attention(p, x, cfg: ArchConfig, positions, kv_cache=None,
         new_kv = None
     else:
         ck, cv = kv_cache
-        idx = jnp.asarray(cache_len)
-        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, idx, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, idx, 0, 0))
+        cl = jnp.asarray(cache_len, jnp.int32)
+        ck = _cache_write(ck, k, cache_len, T)
+        cv = _cache_write(cv, v, cache_len, T)
         ck = constrain(ck, "dp", "sp", None, None)
         cv = constrain(cv, "dp", "sp", None, None)
-        o = L.decode_attention(q, ck, cv, cache_len + T)
+        off = cl if cl.ndim else cache_len
+        if use_kernel and not cl.ndim:
+            from repro.kernels.flash_attention import flash_attention_fwd
+            from repro.kernels.ops import _interpret
+            o = flash_attention_fwd(
+                q.transpose(0, 2, 1, 3), ck.transpose(0, 2, 1, 3),
+                cv.transpose(0, 2, 1, 3), causal=True, q_offset=off,
+                interpret=_interpret()).transpose(0, 2, 1, 3)
+        else:
+            o = L.flash_attention(q, ck, cv, causal=True, q_offset=off)
         new_kv = (ck, cv)
     o = o.reshape(B, T, Hq * dh)
     return o @ p["wo"], new_kv
@@ -189,9 +237,9 @@ def _mla_attention(p, x, cfg: ArchConfig, positions, kv_cache=None,
         new_kv = None
     else:
         cc, cr = kv_cache  # (B,S,rkv), (B,S,rot)
-        idx = jnp.asarray(cache_len)
-        cc = jax.lax.dynamic_update_slice(cc, c_kv.astype(cc.dtype), (0, idx, 0))
-        cr = jax.lax.dynamic_update_slice(cr, k_rope.astype(cr.dtype), (0, idx, 0))
+        cl = jnp.asarray(cache_len, jnp.int32)
+        cc = _cache_write(cc, c_kv, cache_len, T)
+        cr = _cache_write(cr, k_rope, cache_len, T)
         cc = constrain(cc, "dp", "sp", None)
         cr = constrain(cr, "dp", "sp", None)
         # absorbed: q_c = q_nope absorbed through w_uk  -> latent space
@@ -201,8 +249,14 @@ def _mla_attention(p, x, cfg: ArchConfig, positions, kv_cache=None,
              + jnp.einsum("bthr,bsr->bhts", q_rope.astype(jnp.float32),
                           cr.astype(jnp.float32))) * scale
         S = cc.shape[1]
-        mask = jnp.arange(S)[None, :] < (jnp.asarray(cache_len) + T)
-        s = jnp.where(mask[:, None, None, :] if mask.ndim == 2 else mask[None, None, None, :], s, -jnp.inf)
+        # CAUSAL mask at the absolute offset: query row t sits at cache
+        # position cache_len + t and may see k_pos <= that.  The previous
+        # ``k_pos < cache_len + T`` window is only causal for T == 1 — a
+        # T-token batched prefill through it would attend to future tokens.
+        q_pos = L._q_positions(cl if cl.ndim else cache_len, T)
+        mask = jnp.arange(S) <= q_pos[..., :, None]      # (T,S) or (B,T,S)
+        mask = mask[None, None] if mask.ndim == 2 else mask[:, None]
+        s = jnp.where(mask, s, -jnp.inf)
         a = jax.nn.softmax(s, axis=-1)
         o_c = jnp.einsum("bhts,bsr->bthr", a.astype(cc.dtype), cc)
         o = jnp.einsum("bthr,rhv->bthv", o_c, w_uv)
@@ -274,10 +328,12 @@ def moe_block(p, x, cfg: ArchConfig):
     return y.reshape(B, T, d), aux
 
 
-def _block(p, x, cfg: ArchConfig, positions, kv_cache=None, cache_len=None):
+def _block(p, x, cfg: ArchConfig, positions, kv_cache=None, cache_len=None,
+           use_kernel: bool = False):
     attn_fn = _mla_attention if cfg.family == "mla" else _gqa_attention
+    kw = {"use_kernel": use_kernel} if attn_fn is _gqa_attention else {}
     a, new_kv = attn_fn(p["attn"], L.rms_norm(x, p["ln1"]), cfg, positions,
-                        kv_cache, cache_len)
+                        kv_cache, cache_len, **kw)
     x = x + a
     h = L.rms_norm(x, p["ln2"])
     if cfg.family == "moe":
@@ -380,17 +436,29 @@ def _cache_pair(cache, cfg):
     return ("c_kv", "k_rope") if cfg.family == "mla" else ("k", "v")
 
 
-def decode_step(params, cache, tokens, cache_len, cfg: ArchConfig):
-    """One decode step.  tokens: (B, 1).  Returns (logits, new_cache)."""
-    x = embed_tokens(params, tokens, cfg)
-    positions = jnp.full((1, 1), cache_len, jnp.int32)
+def decode_step(params, cache, tokens, cache_len, cfg: ArchConfig,
+                use_kernel: bool = False):
+    """Cached forward at absolute cache offset ``cache_len``.
+
+    tokens: (B, T) — T == 1 is one decode step, T > 1 is a batched prefill
+    (whole prompt in ONE dispatch; the causal mask runs at the absolute
+    offset, so a continued sequence never attends to future tokens).
+    ``cache_len``: scalar (shared offset) or (B,) per-slot write cursors.
+    ``use_kernel`` routes GQA prefill attention through the Pallas
+    flash kernel (scalar offsets only).  Returns (logits, new_cache)."""
+    B, T = tokens.shape
     k1, k2 = _cache_pair(cache, cfg)
-    aux = jnp.zeros((), jnp.float32)
+    _check_capacity(cache_len, T, cache[k1].shape[2])
+    x = embed_tokens(params, tokens, cfg)
+    cl = jnp.asarray(cache_len, jnp.int32)
+    positions = (cl[:, None] + jnp.arange(T)[None, :] if cl.ndim
+                 else (cl + jnp.arange(T))[None, :])
 
     if cfg.scan_layers:
         def body(h, packed):
             lp, c1, c2 = packed
-            h, a, new_kv = _block(lp, h, cfg, positions, (c1, c2), cache_len)
+            h, a, new_kv = _block(lp, h, cfg, positions, (c1, c2), cache_len,
+                                  use_kernel)
             return h, new_kv
         x, (nk1, nk2) = jax.lax.scan(body, x,
                                      (params["layers"], cache[k1], cache[k2]))
@@ -399,9 +467,24 @@ def decode_step(params, cache, tokens, cache_len, cfg: ArchConfig):
         for i in range(cfg.n_layers):
             lp = jax.tree.map(lambda a: a[i], params["layers"])
             x, a, new_kv = _block(lp, x, cfg, positions,
-                                  (cache[k1][i], cache[k2][i]), cache_len)
+                                  (cache[k1][i], cache[k2][i]), cache_len,
+                                  use_kernel)
             nk1s.append(new_kv[0]); nk2s.append(new_kv[1])
         nk1, nk2 = jnp.stack(nk1s), jnp.stack(nk2s)
     x = L.rms_norm(x, params["final_norm"])
     logits = logits_fn(params, x, cfg)
     return logits, {k1: nk1, k2: nk2}
+
+
+def prefill_step(params, cache, tokens, lengths, cache_len, cfg: ArchConfig,
+                 use_kernel: bool = False):
+    """Batched prefill: whole (right-padded) prompts in one dispatch.
+
+    ``lengths`` (B,) true prompt lengths are bookkeeping for the caller —
+    KV written past a row's true length is junk but unreachable: the
+    serving cursor only advances to the true length, and every later
+    attention masks ``k_pos <= q_pos < cursor``.  The caller gathers row
+    i's next-token logits at position ``lengths[i] - 1``."""
+    del lengths
+    return decode_step(params, cache, tokens, cache_len, cfg,
+                       use_kernel=use_kernel)

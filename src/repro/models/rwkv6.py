@@ -67,9 +67,11 @@ def _token_shift(x, prev=None):
     return jnp.concatenate([prev, x[:, :-1]], axis=1)
 
 
-def wkv_chunked(r, k, v, w, u):
-    """Chunked WKV.  r,k,v: (B,T,H,D); w: (B,T,H,D) decay in (0,1);
-    u: (H,D) bonus.  Returns (B,T,H,D), final_state (B,H,D,D)."""
+def wkv_chunked(r, k, v, w, u, initial_state=None):
+    """Chunked WKV.  r,k,v: (B,T,H,D); w: (B,T,H,D) decay in (0,1];
+    u: (H,D) bonus; initial_state: None or (B,H,D,D) carried WKV state
+    (prefill of a continued sequence).  Returns (B,T,H,D), final_state
+    (B,H,D,D).  T must be <= CHUNK or a multiple of CHUNK."""
     B, T, H, D = r.shape
     Q = min(CHUNK, T)
     nC = T // Q
@@ -103,7 +105,8 @@ def wkv_chunked(r, k, v, w, u):
     def scan_body(S_prev, inp):
         dec, Sc = inp
         return S_prev * dec[..., None] + Sc, S_prev
-    S0 = jnp.zeros((B, H, D, D), f32)
+    S0 = (jnp.zeros((B, H, D, D), f32) if initial_state is None
+          else initial_state.astype(f32))
     S_last, S_prevs = jax.lax.scan(
         scan_body, S0, (chunk_decay.swapaxes(0, 1), S_c.swapaxes(0, 1)))
     S_prevs = S_prevs.swapaxes(0, 1)                     # (B,nC,H,D,D)
@@ -114,8 +117,11 @@ def wkv_chunked(r, k, v, w, u):
     return y, S_last
 
 
-def _time_mix(lp, x, prev_tok, state, cfg):
-    """RWKV6 time-mix.  state: None (train) or (B,H,D,D)."""
+def _time_mix(lp, x, prev_tok, state, cfg, pad_mask=None):
+    """RWKV6 time-mix.  state: None (train) or (B,H,D,D).  pad_mask (B,T)
+    marks real tokens in a stateful T>1 prefill: padded positions are made
+    state-neutral (w=1, k=0 => S_t = S_{t-1}) so right-padded prompts leave
+    the exact same state as their unpadded tokens alone."""
     B, T, d = x.shape
     H, D = cfg.n_heads, cfg.d_head
     xs = _token_shift(x, prev_tok)
@@ -132,6 +138,13 @@ def _time_mix(lp, x, prev_tok, state, cfg):
     w = jnp.exp(-jnp.exp(dec)).reshape(B, T, H, D)
     if state is None:
         y, S_last = wkv_chunked(r, k, v, w, lp["u"])
+    elif T > 1:  # stateful batched prefill
+        if pad_mask is not None:
+            m = pad_mask[:, :, None, None]
+            k = jnp.where(m, k, 0.0)
+            w = jnp.where(m, w, 1.0)
+        y, S_last = wkv_chunked(r, k, v, w, lp["u"],
+                                initial_state=state.astype(jnp.float32))
     else:  # decode: T == 1
         r1, k1, v1, w1 = (t[:, 0].astype(jnp.float32) for t in (r, k, v, w))
         kv = jnp.einsum("bhd,bhe->bhde", k1, v1)
@@ -237,3 +250,80 @@ def decode_step(params, cache, tokens, cache_len, cfg: ArchConfig):
     logits = jnp.einsum("btd,vd->btv", x, params["out_embed"])
     logits = constrain(logits, "dp", "sp", None)
     return logits, {"wkv": wkv, "tm_x": tm_x, "cm_x": cm_x}
+
+
+def _prefill_chunked(params, cache, tokens, lens, cfg):
+    """Fast chunked prefill: padded positions are state-neutral (w=1, k=0)
+    and the token-shift carries are gathered at lengths-1.  Algebraically
+    identical to the decode loop but NOT bit-identical: the loop rounds the
+    WKV state through the cache dtype every token, the chunked form once."""
+    B, T = tokens.shape
+    pad = 0 if T <= CHUNK else (-T) % CHUNK
+    if pad:
+        tokens = jnp.pad(tokens, ((0, 0), (0, pad)))
+    pad_mask = jnp.arange(T + pad)[None, :] < lens[:, None]
+
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, "dp", "sp", None)
+    rows = jnp.arange(B)
+
+    def body(h, packed):
+        lp, wkv, tm_x, cm_x = packed
+        n1 = L.rms_norm(h, lp["ln1"])
+        a, S = _time_mix(lp, n1, tm_x, wkv, cfg, pad_mask)
+        h = h + a
+        n2 = L.rms_norm(h, lp["ln2"])
+        h = h + _channel_mix(lp, n2, cm_x)
+        new_tm = n1[rows, lens - 1][:, None]
+        new_cm = n2[rows, lens - 1][:, None]
+        return h, (S.astype(wkv.dtype), new_tm.astype(tm_x.dtype),
+                   new_cm.astype(cm_x.dtype))
+
+    if cfg.scan_layers:
+        x, (wkv, tm_x, cm_x) = jax.lax.scan(
+            body, x, (params["layers"], cache["wkv"], cache["tm_x"],
+                      cache["cm_x"]))
+    else:
+        wkvs, tms, cms = [], [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, (S, t1, t2) = body(x, (lp, cache["wkv"][i], cache["tm_x"][i],
+                                      cache["cm_x"][i]))
+            wkvs.append(S); tms.append(t1); cms.append(t2)
+        wkv, tm_x, cm_x = jnp.stack(wkvs), jnp.stack(tms), jnp.stack(cms)
+    x = L.rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("btd,vd->btv", x[:, :T], params["out_embed"])
+    logits = constrain(logits, "dp", "sp", None)
+    return logits, {"wkv": wkv, "tm_x": tm_x, "cm_x": cm_x}
+
+
+def prefill_step(params, cache, tokens, lengths, cache_len, cfg: ArchConfig,
+                 use_kernel: bool = False, chunked: bool = False):
+    """Batched prefill: whole right-padded prompts in ONE dispatch.
+
+    tokens: (B, T); lengths: (B,) true prompt lengths.  Default mode scans
+    single-token decode steps inside the dispatch with a per-row activity
+    mask (rows past their length keep their old state verbatim), which makes
+    the returned cache and per-row next-token logits BIT-IDENTICAL to the
+    token-at-a-time decode loop — including the cache-dtype rounding of the
+    WKV state between tokens.  ``chunked=True`` selects the parallel chunked
+    formulation (faster, same algebra, float-reassociated).  The caller
+    reads row i's next-token logits at position lengths[i]-1."""
+    del cache_len, use_kernel   # stateful family: no KV offset, no kernel
+    lens = jnp.asarray(lengths, jnp.int32)
+    if chunked:
+        return _prefill_chunked(params, cache, tokens, lens, cfg)
+
+    def step(c, xt):
+        tok_t, t = xt
+        logits_t, c_new = decode_step(params, c, tok_t[:, None], None, cfg)
+        active = t < lens                                  # (B,)
+        def keep(new, old):
+            m = active.reshape((1, -1) + (1,) * (new.ndim - 2))
+            return jnp.where(m, new, old)
+        return jax.tree.map(keep, c_new, c), logits_t[:, 0]
+
+    T = tokens.shape[1]
+    new_cache, logits = jax.lax.scan(
+        step, cache, (tokens.T, jnp.arange(T)))
+    return logits.swapaxes(0, 1), new_cache

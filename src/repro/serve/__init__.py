@@ -1,0 +1,12 @@
+"""Continuous-batching inference service (DESIGN.md §9).
+
+Slot-based paged KV cache + admission/eviction scheduler on top of the
+ModelOps decode/prefill families.  See ``cache.SlotKVCache`` and
+``engine.ServeEngine``.
+"""
+from repro.serve.cache import SlotKVCache
+from repro.serve.engine import (Request, Finished, ServeEngine, RequestFeed,
+                                poisson_trace)
+
+__all__ = ["SlotKVCache", "Request", "Finished", "ServeEngine",
+           "RequestFeed", "poisson_trace"]

@@ -1,0 +1,94 @@
+"""Slot-based paged KV/state cache for continuous batching (DESIGN.md §9).
+
+The cache pytree is the family's own ``init_cache(slots, max_seq)`` tree —
+every leaf has the slot (batch) axis at position 1, i.e. ``(L, slots, ...)``:
+KV families carry ``(L, slots, max_seq, H, D)`` ring buffers, the stateful
+family carries ``(L, slots, H, D, D)`` WKV state plus token-shift carries.
+Compiled shapes therefore NEVER change as requests come and go: admission
+scatters a freshly prefilled sub-cache into free slot rows, eviction just
+returns the slot id to the free list (the row's stale contents are dead —
+the next admission overwrites the whole row).
+
+Host-side bookkeeping:
+  * ``cursors`` — per-slot write cursor (absolute cache position of the
+    next token).  Passed as the vector ``cache_len`` to decode, so one
+    compiled dispatch steps slots sitting at different depths.
+  * free list — allocation is lowest-slot-first and deterministic, so a
+    replayed trace admits into the same slots.
+
+Capacity contract: a KV slot holds ``max_seq`` positions; admission of a
+request needs ``prompt_len + max_new <= max_seq`` (validated here with an
+actionable error — the in-model ``_check_capacity`` guards the eager path,
+this guards the jitted serving path whose cursors are traced).  The
+stateful family has O(1) state and no sequence capacity.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter(tree, sub, slot_ids):
+    """Write sub-cache rows (slot axis 1) into the slot cache rows."""
+    return jax.tree.map(
+        lambda c, s: c.at[:, slot_ids].set(s.astype(c.dtype)), tree, sub)
+
+
+class SlotKVCache:
+    """Fixed-shape slot cache + free-slot map + per-slot write cursors."""
+
+    def __init__(self, ops, slots: int, max_seq: int):
+        self.slots = slots
+        self.max_seq = max_seq
+        self.tree = ops.init_cache(slots, max_seq)
+        #: stateful families (rwkv) have no per-position axis to overflow
+        self.stateful = "wkv" in self.tree
+        self.cursors = np.zeros(slots, np.int32)
+        self._free = sorted(range(slots), reverse=True)  # pop() -> lowest id
+
+    # -- allocation ---------------------------------------------------------
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list:
+        if n > len(self._free):
+            raise RuntimeError(
+                f"requested {n} slots but only {len(self._free)} free")
+        return [self._free.pop() for _ in range(n)]
+
+    def release(self, slot: int) -> None:
+        self.cursors[slot] = 0
+        self._free.append(slot)
+        self._free.sort(reverse=True)
+
+    # -- capacity -----------------------------------------------------------
+    def validate_admit(self, prompt_len: int, max_new: int) -> None:
+        """Reject a request that cannot fit: prompt + generated tokens must
+        stay inside the slot's ``max_seq`` positions (KV families)."""
+        if self.stateful:
+            return
+        need = prompt_len + max_new
+        if need > self.max_seq:
+            raise ValueError(
+                f"request needs {need} cache positions (prompt={prompt_len} "
+                f"+ max_new={max_new}) but slots hold max_seq={self.max_seq}; "
+                f"raise ServeEngine(max_seq=...) or shorten the request")
+
+    # -- adoption -----------------------------------------------------------
+    def adopt(self, sub_tree, slot_ids, lengths) -> None:
+        """Scatter a prefilled sub-cache (slot axis 1, rows parallel to
+        ``slot_ids``) into the slot cache and start the write cursors at
+        each row's true prompt length."""
+        ids = jnp.asarray(np.asarray(slot_ids, np.int32))
+        self.tree = _scatter(self.tree, sub_tree, ids)
+        for s, ln in zip(slot_ids, np.asarray(lengths)):
+            self.cursors[s] = int(ln)
+
+    def zeros_like_sub(self, ops, n_rows: int):
+        """A fresh all-zero sub-cache for ``n_rows`` prefill rows."""
+        return jax.tree.map(lambda a: jnp.zeros(a.shape, a.dtype),
+                            ops.abstract_cache(n_rows, self.max_seq))

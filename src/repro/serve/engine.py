@@ -1,0 +1,291 @@
+"""Continuous-batching serve engine (DESIGN.md §9).
+
+The CHAOS mapping: training kept every lane busy with thread+vector
+parallelism; serving keeps the device busy by stepping ALL occupied cache
+slots in one fixed-shape compiled dispatch per token, admitting queued
+requests into free slots mid-flight (batched prefill) and evicting
+finished sequences without recompiling anything.
+
+Scheduler loop (one ``step()``):
+  1. admit  — pop every arrived request that fits a free slot, prefill the
+     group in ONE dispatch (whole right-padded prompts; ``q_offset`` keeps
+     the causal mask honest), scatter the sub-cache into the slots, and
+     take each row's first sampled token from the prefill logits at
+     ``lengths-1`` — the prefill dispatch IS that token's decode.
+  2. decode — one compiled dispatch over the whole slot batch with the
+     per-slot cursor vector as ``cache_len``; greedy sampling is fused
+     into the dispatch (no eager host-side argmax), so a request that
+     generates ``gen`` tokens costs exactly 1 prefill + (gen-1) decode
+     dispatches — the old per-token loop paid one extra trailing decode
+     whose logits were discarded, plus a host sync per token.
+  3. evict  — slots whose request hit ``max_new`` go back to the free
+     list; idle slots keep decoding junk (harmless: causal rows are never
+     fully masked, and admission overwrites the whole slot row).
+
+Determinism: admission time is VIRTUAL (``step_dt`` seconds of clock per
+decode step), sampling is greedy, and every per-row computation is
+independent of its batch neighbours — so a (seed, trace) pair generates
+identical tokens regardless of slot count or admission interleaving.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as C
+from repro.models.api import get_ops
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray          # (prompt_len,) int32
+    max_new: int
+    arrival: float = 0.0        # virtual seconds
+
+
+@dataclasses.dataclass
+class Finished:
+    rid: int
+    prompt_len: int
+    tokens: np.ndarray          # (n_generated,) int32
+    admit_step: int
+    finish_step: int
+
+
+def poisson_trace(seed: int, n: int, rate: float, vocab: int,
+                  prompt_lens=(8, 32), max_new: int = 8) -> list:
+    """Seeded Poisson request trace: exponential inter-arrivals at ``rate``
+    requests per virtual second, uniform prompt lengths in ``prompt_lens``
+    (inclusive), random token ids.  Deterministic in ``seed``."""
+    rng = np.random.default_rng(seed)
+    t, reqs = 0.0, []
+    lo, hi = prompt_lens
+    for i in range(n):
+        t += float(rng.exponential(1.0 / rate))
+        ln = int(rng.integers(lo, hi + 1))
+        toks = rng.integers(0, vocab, size=(ln,)).astype(np.int32)
+        reqs.append(Request(rid=i, tokens=toks, max_new=max_new, arrival=t))
+    return reqs
+
+
+class RequestFeed(threading.Thread):
+    """Producer side of the feed/compute split (the superstep PrefetchFeed
+    idiom from launch/train.py): replays a trace into a bounded queue so
+    request ingest (tokenize/IO stand-in) overlaps the device loop.  With
+    ``realtime=True`` it sleeps until each request's (scaled) arrival."""
+
+    def __init__(self, trace, depth: int = 64, realtime: bool = False,
+                 time_scale: float = 0.0):
+        super().__init__(daemon=True)
+        self.q = queue.Queue(maxsize=depth)
+        self._trace = list(trace)
+        self._realtime = realtime
+        self._scale = time_scale
+        self._stop = threading.Event()
+
+    def run(self):
+        t0 = time.time()
+        for req in self._trace:
+            if self._stop.is_set():
+                return
+            if self._realtime:
+                lag = req.arrival * self._scale - (time.time() - t0)
+                if lag > 0:
+                    time.sleep(lag)
+            self.q.put(req)
+        self.q.put(None)                     # sentinel: trace exhausted
+
+    def stop(self):
+        self._stop.set()
+
+    def drain(self) -> list:
+        """Non-blocking: every request available right now."""
+        out = []
+        while True:
+            try:
+                item = self.q.get_nowait()
+            except queue.Empty:
+                return out
+            if item is None:
+                return out
+            out.append(item)
+
+
+def _pow2_bucket(n: int, lo: int = 8) -> int:
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+class ServeEngine:
+    """Continuous-batching engine over one model family.
+
+    ``prefill_mode``: 'batched' (whole prompts, one dispatch — the fast
+    path) or 'loop' (token-at-a-time reference, the pre-§9 serve loop,
+    kept as the benchmark baseline).  ``use_kernel`` routes GQA prefill
+    attention through the Pallas flash kernel (interpret-mode on CPU)."""
+
+    def __init__(self, arch: str, *, slots: int = 4, max_seq: int = 128,
+                 smoke: bool = True, seed: int = 0, step_dt: float = 1.0,
+                 prefill_mode: str = "batched", use_kernel: bool = False,
+                 params=None):
+        from repro.serve.cache import SlotKVCache
+        if prefill_mode not in ("batched", "loop"):
+            raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
+        self.cfg = C.smoke(arch) if smoke else C.get(arch)
+        self.ops = get_ops(self.cfg)
+        if self.ops.decode is None or self.ops.prefill is None:
+            raise ValueError(f"{arch} ({self.cfg.family}) is not servable")
+        self.params = (params if params is not None
+                       else self.ops.init(jax.random.key(seed)))
+        self.kv = SlotKVCache(self.ops, slots, max_seq)
+        self.prefill_mode = prefill_mode
+        self.use_kernel = use_kernel
+        self.step_dt = step_dt
+        self.clock = 0.0
+        self.step_idx = 0
+        self.pending: list = []              # sorted by arrival
+        self.active: dict = {}               # slot -> state dict
+        self.counters = {"prefill_dispatch": 0, "decode_dispatch": 0,
+                         "prefill_tokens": 0, "decode_tokens": 0}
+        self.last_tok = np.zeros((slots, 1), np.int32)
+        self._prefill_jit: dict = {}
+        vocab = self.cfg.vocab_size
+
+        def _decode(params, cache, toks, cursors):
+            logits, cache = self.ops.decode(params, cache, toks, cursors)
+            nxt = jnp.argmax(logits[:, -1, :vocab], axis=-1)
+            return nxt.astype(jnp.int32)[:, None], cache
+
+        self._decode = jax.jit(_decode, donate_argnums=(1,))
+        # token-at-a-time reference prefill step (cache_len as a traced
+        # scalar so one program serves every position)
+        self._decode_t1 = jax.jit(
+            lambda p, c, t, cl: self.ops.decode(p, c, t, cl))
+
+    # -- prefill ------------------------------------------------------------
+    def _prefill_fn(self, A: int, T: int):
+        key = (A, T)
+        if key in self._prefill_jit:
+            return self._prefill_jit[key]
+        ops, vocab = self.ops, self.cfg.vocab_size
+        kw = ({"use_kernel": True} if self.use_kernel
+              and self.cfg.family == "dense" else {})
+
+        def fn(params, tokens, lengths):
+            sub = self.kv.zeros_like_sub(ops, A)
+            logits, sub = ops.prefill(params, sub, tokens, lengths, 0, **kw)
+            rows = jnp.arange(A)
+            nxt = jnp.argmax(logits[rows, lengths - 1, :vocab], axis=-1)
+            return nxt.astype(jnp.int32)[:, None], sub
+
+        self._prefill_jit[key] = jax.jit(fn)
+        return self._prefill_jit[key]
+
+    def _admit(self, reqs) -> None:
+        slots = self.kv.alloc(len(reqs))
+        lens = np.array([len(r.tokens) for r in reqs], np.int32)
+        if self.prefill_mode == "batched":
+            T = _pow2_bucket(int(lens.max()))
+            if not self.kv.stateful:
+                # bucket padding writes [0, T) into every row's KV slot, so
+                # the bucket itself must fit (admitted rows already do)
+                T = min(T, self.kv.max_seq)
+            toks = np.zeros((len(reqs), T), np.int32)
+            for i, r in enumerate(reqs):
+                toks[i, :lens[i]] = r.tokens
+            first, sub = self._prefill_fn(len(reqs), T)(
+                self.params, jnp.asarray(toks), jnp.asarray(lens))
+            self.counters["prefill_dispatch"] += 1
+            self.kv.adopt(sub, slots, lens)
+            first = np.asarray(first)
+        else:                                # token-at-a-time reference loop
+            first = np.zeros((len(reqs), 1), np.int32)
+            sub_rows = []
+            for i, r in enumerate(reqs):
+                logits = None
+                row = self.kv.zeros_like_sub(self.ops, 1)
+                for t in range(lens[i]):
+                    tok = jnp.asarray(r.tokens[t:t + 1][None])
+                    logits, row = self._decode_t1(
+                        self.params, row, tok, jnp.int32(t))
+                    self.counters["prefill_dispatch"] += 1
+                first[i, 0] = int(jnp.argmax(
+                    logits[0, -1, :self.cfg.vocab_size]))
+                sub_rows.append(row)
+            sub = jax.tree.map(lambda *xs: jnp.concatenate(xs, 1), *sub_rows)
+            self.kv.adopt(sub, slots, lens)
+        self.counters["prefill_tokens"] += int(lens.sum())
+        for i, (r, s) in enumerate(zip(reqs, slots)):
+            self.last_tok[s, 0] = first[i, 0]
+            self.active[s] = {"req": r, "out": [int(first[i, 0])],
+                              "admit_step": self.step_idx}
+
+    # -- scheduler ----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.kv.validate_admit(len(req.tokens), req.max_new)
+        self.pending.append(req)
+        self.pending.sort(key=lambda r: (r.arrival, r.rid))
+
+    def _evict_done(self) -> list:
+        done = []
+        for slot in sorted(self.active):
+            st = self.active[slot]
+            if len(st["out"]) >= st["req"].max_new:
+                done.append(Finished(
+                    rid=st["req"].rid, prompt_len=len(st["req"].tokens),
+                    tokens=np.array(st["out"], np.int32),
+                    admit_step=st["admit_step"], finish_step=self.step_idx))
+                del self.active[slot]
+                self.kv.release(slot)
+        return done
+
+    def step(self) -> list:
+        """One scheduler step: admit -> (maybe) decode -> evict.  Returns
+        requests finished during this step."""
+        if not self.active and self.pending:
+            # idle engine: jump the virtual clock to the next arrival
+            self.clock = max(self.clock, self.pending[0].arrival)
+        grab = []
+        while (self.pending and self.kv.free_count() > len(grab)
+               and self.pending[0].arrival <= self.clock):
+            grab.append(self.pending.pop(0))
+        if grab:
+            self._admit(grab)
+        done = self._evict_done()            # max_new == 1 finishes here
+        if not self.active:
+            self.clock += self.step_dt
+            self.step_idx += 1
+            return done
+        nxt, self.kv.tree = self._decode(
+            self.params, self.kv.tree, jnp.asarray(self.last_tok),
+            jnp.asarray(self.kv.cursors))
+        self.counters["decode_dispatch"] += 1
+        nxt = np.asarray(nxt)                # sync point (sampled on-device)
+        for slot, st in self.active.items():
+            self.kv.cursors[slot] += 1
+            st["out"].append(int(nxt[slot, 0]))
+            self.last_tok[slot, 0] = nxt[slot, 0]
+        self.counters["decode_tokens"] += len(self.active)
+        done += self._evict_done()
+        self.clock += self.step_dt
+        self.step_idx += 1
+        return done
+
+    def run(self, trace=None) -> list:
+        """Drive until every submitted/traced request finishes."""
+        for r in (trace or []):
+            self.submit(r)
+        finished = []
+        while self.pending or self.active:
+            finished.extend(self.step())
+        return sorted(finished, key=lambda f: f.rid)

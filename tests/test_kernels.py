@@ -394,3 +394,54 @@ def test_pallas_wkv6_state_continuity():
     got = wkv6_chunked(r, k, v, w, u, chunk=32)
     want, _ = naive_wkv(r, k, v, w, u)
     np.testing.assert_allclose(got, want, atol=2e-3, rtol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# q_offset: absolute query position in the flash kernel's causal mask (§9).
+# Pre-fix, the kernel assumed q and k both start at position 0, so a batched
+# prefill of a CONTINUED sequence (queries at cache positions
+# [cache_len, cache_len+Tq)) masked every cached key as "future".
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("offset_kind", ["zero", "cache_len"])
+def test_pallas_flash_attention_q_offset(offset_kind):
+    from repro.kernels.flash_attention import flash_attention_fwd
+    from repro.models import layers as L
+    B, Hq, Hkv, Tq, Tk, D = 2, 4, 2, 16, 64, 32
+    offset = 0 if offset_kind == "zero" else Tk - Tq   # append at cache tail
+    ks = jax.random.split(jax.random.key(41), 3)
+    q = jax.random.normal(ks[0], (B, Hq, Tq, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Hkv, Tk, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Hkv, Tk, D), jnp.float32)
+    got = flash_attention_fwd(q, k, v, causal=True, q_offset=offset,
+                              block_q=16, block_k=32)
+    want = L.flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                             v.transpose(0, 2, 1, 3), causal=True,
+                             q_offset=offset).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(got, want, atol=3e-5, rtol=3e-5)
+    if offset:
+        # regression vs the pre-fix behaviour: offset must actually admit
+        # the cached keys, i.e. differ from running the kernel at offset 0
+        at0 = flash_attention_fwd(q, k, v, causal=True, q_offset=0,
+                                  block_q=16, block_k=32)
+        assert not np.allclose(np.asarray(got), np.asarray(at0))
+
+
+def test_pallas_flash_attention_q_offset_traced():
+    """A traced (jitted scalar) offset must match the python-int program —
+    the offset rides in SMEM, so one compiled program serves every cache
+    position."""
+    from repro.kernels.flash_attention import flash_attention_fwd
+    B, H, Tq, Tk, D = 1, 2, 8, 32, 16
+    ks = jax.random.split(jax.random.key(5), 3)
+    q = jax.random.normal(ks[0], (B, H, Tq, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, H, Tk, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, H, Tk, D), jnp.float32)
+    fn = jax.jit(lambda off: flash_attention_fwd(
+        q, k, v, causal=True, q_offset=off, block_q=8, block_k=16))
+    for off in (0, 13, Tk - Tq):
+        np.testing.assert_allclose(
+            np.asarray(fn(jnp.int32(off))),
+            np.asarray(flash_attention_fwd(q, k, v, causal=True,
+                                           q_offset=off, block_q=8,
+                                           block_k=16)),
+            atol=1e-6, rtol=1e-6)
