@@ -7,12 +7,14 @@ instead of re-running the whole hours-long grid):
         PYTHONPATH=src python -m benchmarks.scaling --modes chaos > new.json
     PYTHONPATH=src python -m benchmarks.merge_scaling new.json
 
-Rows whose ``mode`` appears in the patch replace the artifact's rows for
-that mode wholesale; ``speedup_vs_1`` / ``model_speedup`` and the
-human-readable ``rows`` entries are recomputed for the new cells exactly
-like ``benchmarks/run.py::bench_scaling`` does (speedup baselines come
-from the patch's own N=1 cells, so a partial sweep without N=1 yields
-NaN rather than a stale cross-engine ratio).
+Rows whose ``(net, mode)`` pair appears in the patch replace the
+artifact's rows for that pair wholesale (so an ``--nets lm-bench`` patch
+adds/refreshes only the dense-LM column and leaves the CNN grid alone);
+``speedup_vs_1`` / ``model_speedup`` and the human-readable ``rows``
+entries are recomputed for the new cells exactly like
+``benchmarks/run.py::bench_scaling`` does (speedup baselines come from
+the patch's own N=1 cells, so a partial sweep without N=1 yields NaN
+rather than a stale cross-engine ratio).
 """
 from __future__ import annotations
 
@@ -30,18 +32,17 @@ DEFAULT_ARTIFACT = os.path.join(os.path.dirname(__file__), "..",
 
 
 def merge(doc: dict, new_runs: list, note: str | None = None) -> dict:
-    from benchmarks.run import PAPER_ARCH
-    from repro.core import perf_model as pm
+    from benchmarks.run import _model_speedup
 
-    modes = {r["mode"] for r in new_runs}
-    runs = [r for r in doc["runs"] if r["mode"] not in modes]
-    base = {(r["net"], r["use_kernel"]): r["steps_per_s"]
+    pairs = {(r["net"], r["mode"]) for r in new_runs}
+    runs = [r for r in doc["runs"]
+            if (r["net"], r["mode"]) not in pairs]
+    base = {(r["net"], r["mode"], r["use_kernel"]): r["steps_per_s"]
             for r in new_runs if r["workers"] == 1}
     for r in new_runs:
-        b = base.get((r["net"], r["use_kernel"]))
+        b = base.get((r["net"], r["mode"], r["use_kernel"]))
         r["speedup_vs_1"] = r["steps_per_s"] / b if b else float("nan")
-        r["model_speedup"] = pm.predict_speedup(PAPER_ARCH[r["net"]],
-                                                r["workers"])
+        r["model_speedup"] = _model_speedup(r)
     runs.extend(new_runs)
     runs.sort(key=lambda r: (r["net"], r["use_kernel"], r["mode"],
                              r["workers"]))
@@ -51,7 +52,8 @@ def merge(doc: dict, new_runs: list, note: str | None = None) -> dict:
         doc["note"] = doc.get("note", "") + "; " + note
 
     rows = [row for row in doc.get("rows", [])
-            if not any(f"/{m}/" in row["name"] for m in modes)]
+            if not any(f"scaling/{n}/{m}/" in row["name"]
+                       for n, m in pairs)]
     for r in new_runs:
         kind = "kernel" if r["use_kernel"] else "xla"
         rows.append({
@@ -86,7 +88,7 @@ def main():
     with open(args.artifact, "w") as f:
         json.dump(doc, f, indent=1)
     print(f"merged {len(new_runs)} rows "
-          f"(modes: {sorted({r['mode'] for r in new_runs})}) "
+          f"(cells: {sorted({(r['net'], r['mode']) for r in new_runs})}) "
           f"into {args.artifact}; total {len(doc['runs'])}")
 
 

@@ -1,0 +1,116 @@
+"""Merge a partial staleness-τ re-measurement into BENCH_staleness.json.
+
+Workflow (add/refresh one net's column — e.g. the dense-LM cells —
+without re-running the whole hours-long CNN convergence grid):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m benchmarks.staleness --nets lm-bench > new.json
+    PYTHONPATH=src python -m benchmarks.merge_staleness new.json
+
+Rows whose ``net`` appears in the patch replace the artifact's rows for
+that net wholesale; every derived column (``speedup_vs_tau0``,
+``speedup_vs_n1``, ``error_delta_vs_tau0``, ``speedup_vs_batched``,
+``model_speedup``) and the human-readable ``rows`` entries are recomputed
+for the new cells exactly like ``benchmarks/run.py::bench_staleness``
+does — baselines come from the patch's own cells, so a partial sweep
+missing its τ=0 / N=1 / batched twin yields NaN rather than a stale
+cross-measurement ratio.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+DEFAULT_ARTIFACT = os.path.join(os.path.dirname(__file__), "..",
+                                "BENCH_staleness.json")
+
+
+def attach_derived(new_runs: list) -> None:
+    """Recompute the derived columns for ``new_runs`` in place, exactly
+    like ``bench_staleness`` (baselines resolved within ``new_runs``)."""
+    from benchmarks.run import _model_speedup
+
+    lw = lambda r: bool(r.get("layerwise"))
+    base = {(r["net"], r["workers"], lw(r)): r for r in new_runs
+            if r["tau"] == 0}
+    base_n1 = {(r["net"], r["tau"], lw(r)): r for r in new_runs
+               if r["workers"] == 1}
+    batched = {(r["net"], r["tau"], r["workers"]): r for r in new_runs
+               if not lw(r)}
+    for r in new_runs:
+        b = base.get((r["net"], r["workers"], lw(r)))
+        b1 = base_n1.get((r["net"], r["tau"], lw(r)))
+        tw = batched.get((r["net"], r["tau"], r["workers"]))
+        r["speedup_vs_tau0"] = (r["steps_per_s"] / b["steps_per_s"]
+                                if b else float("nan"))
+        r["speedup_vs_n1"] = (r["steps_per_s"] / b1["steps_per_s"]
+                              if b1 else float("nan"))
+        r["error_delta_vs_tau0"] = (r["final_error"] - b["final_error"]
+                                    if b else float("nan"))
+        r["speedup_vs_batched"] = (r["steps_per_s"] / tw["steps_per_s"]
+                                   if lw(r) and tw else float("nan"))
+        r["model_speedup"] = _model_speedup(r)
+
+
+def merge(doc: dict, new_runs: list, note: str | None = None) -> dict:
+    nets = {r["net"] for r in new_runs}
+    runs = [r for r in doc["runs"] if r["net"] not in nets]
+    attach_derived(new_runs)
+    runs.extend(new_runs)
+    lw = lambda r: bool(r.get("layerwise"))
+    runs.sort(key=lambda r: (r["net"], r["workers"], r["tau"], lw(r)))
+    doc["runs"] = runs
+    doc["timestamp"] = time.time()
+    if note:
+        doc["note"] = doc.get("note", "") + "; " + note
+
+    rows = [row for row in doc.get("rows", [])
+            if not any(f"staleness/{n}/" in row["name"] for n in nets)]
+    for r in new_runs:
+        kind = "layerwise" if lw(r) else "batched"
+        rows.append({
+            "name": f"staleness/{r['net']}/tau{r['tau']}/N{r['workers']}"
+                    f"/{kind}",
+            "us_per_call": r["us_per_step"],
+            "derived": f"{r['steps_per_s']:.1f}steps_per_s"
+                       f"_err={r['final_error']:.4f}"
+                       f"_derr={r['error_delta_vs_tau0']:+.4f}"
+                       f"_speedup_tau0={r['speedup_vs_tau0']:.2f}x"})
+    doc["rows"] = rows
+    return doc
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("patch", help="JSON from benchmarks.staleness "
+                                  "--nets ... ('-' reads stdin)")
+    ap.add_argument("--artifact", default=os.path.normpath(DEFAULT_ARTIFACT))
+    ap.add_argument("--note", default=None,
+                    help="appended to the artifact's note field")
+    args = ap.parse_args()
+
+    with open(args.artifact) as f:
+        doc = json.load(f)
+    if args.patch == "-":
+        new_runs = json.load(sys.stdin)["runs"]
+    else:
+        with open(args.patch) as f:
+            new_runs = json.load(f)["runs"]
+    if not new_runs:
+        sys.exit("patch contains no runs")
+    doc = merge(doc, new_runs, args.note)
+    with open(args.artifact, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"merged {len(new_runs)} rows "
+          f"(nets: {sorted({r['net'] for r in new_runs})}) "
+          f"into {args.artifact}; total {len(doc['runs'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,14 @@ CPU-friendly default (~45M params, 300 steps); pass --full-100m for the
 bigger run if you have time.
 
     PYTHONPATH=src python examples/llm_pretrain.py [--steps 300] [--sync chaos]
+
+Worker-mesh route (CHAOS at transformer scale, DESIGN.md §10): N worker
+instances over forced host devices, the chunked layer stack exchanged
+bucket-by-bucket with the paper's layerwise update rule, attention through
+the trainable Pallas flash kernel:
+
+    python examples/llm_pretrain.py --steps 8 --superstep 4 --workers 2 \
+        --layerwise --interleave --use-kernel --staleness 1
 """
 import argparse
 import dataclasses
@@ -13,6 +21,21 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _force_host_devices():
+    """The worker-mesh route needs N visible devices; XLA reads the flag at
+    jax-import time, so peek argv BEFORE importing jax."""
+    if "--workers" not in sys.argv:
+        return
+    n = int(sys.argv[sys.argv.index("--workers") + 1])
+    flags = os.environ.get("XLA_FLAGS", "")
+    if n > 1 and "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={n}").strip()
+
+
+_force_host_devices()
 
 import jax
 import numpy as np
@@ -41,11 +64,50 @@ def main():
     ap.add_argument("--sync", default="chaos")
     ap.add_argument("--full-100m", action="store_true")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_llm_ckpt")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--superstep", type=int, default=1,
+                    help="steps per compiled scan dispatch (K)")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="CHAOS worker-mesh route: N worker instances over "
+                         "forced host devices (the flag is injected before "
+                         "jax initialises)")
+    ap.add_argument("--logical-shards", type=int, default=4,
+                    help="fixed micro-shard count on the worker route; must "
+                         "divide --batch, any --workers dividing it is "
+                         "bit-identical for bsp/chaos")
+    ap.add_argument("--staleness", type=int, default=1,
+                    help="chaos staleness tau (0 degenerates exactly to bsp)")
+    ap.add_argument("--layerwise", action="store_true",
+                    help="paper's per-bucket non-instant updates: the "
+                         "chunked layer stack is exchanged bucket-by-bucket")
+    ap.add_argument("--interleave", action="store_true",
+                    help="fire each chunk bucket's exchange during backprop "
+                         "(worker route, DESIGN.md §8/§10)")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="attention through the trainable Pallas flash "
+                         "kernel (kernels/flash_attention.py)")
+    ap.add_argument("--compress", action="store_true",
+                    help="bf16 gradient exchange with error feedback")
+    ap.add_argument("--layer-chunk", type=int, default=None,
+                    help="layer-stack chunk size (default: 2 when "
+                         "--layerwise, else the single-stack scan layout)")
+    ap.add_argument("--optim", default="auto",
+                    choices=["auto", "sgd", "momentum", "adamw"],
+                    help="optimizer (auto -> adamw; adamw's whole-tree "
+                         "grad clip keeps --interleave on the "
+                         "collect-then-walk schedule — pass sgd for the "
+                         "true mid-backprop interleaved exchange)")
     args = ap.parse_args()
+
+    layer_chunk = args.layer_chunk
+    if layer_chunk is None and args.layerwise:
+        layer_chunk = 2  # embed -> n_layers/2 chunk buckets -> head
 
     cfg = make_cfg(args.full_100m)
     n = cfg.param_count()
-    print(f"model: {cfg.name} ({n/1e6:.0f}M params), sync={args.sync}")
+    print(f"model: {cfg.name} ({n/1e6:.0f}M params), sync={args.sync}, "
+          f"workers={args.workers}, layer_chunk={layer_chunk}, "
+          f"kernel={args.use_kernel}")
 
     # register the config on the fly so the standard driver can use it
     import repro.configs as CF
@@ -56,9 +118,19 @@ def main():
     CF._ALIAS[cfg.name] = cfg.name
     sys.modules[f"repro.configs.{cfg.name}"] = mod
 
-    state, losses = T.train(cfg.name, args.steps, args.sync, batch=4,
-                            seq=256, ckpt_dir=args.ckpt_dir, ckpt_every=100,
-                            base_lr=1e-3, log_every=20)
+    state, losses = T.train(cfg.name, args.steps, args.sync,
+                            batch=args.batch, seq=256,
+                            ckpt_dir=args.ckpt_dir, ckpt_every=100,
+                            base_lr=1e-3, log_every=20,
+                            superstep=args.superstep,
+                            use_kernel=args.use_kernel,
+                            workers=args.workers,
+                            logical_shards=args.logical_shards,
+                            staleness=args.staleness,
+                            layerwise=args.layerwise,
+                            interleave=args.interleave,
+                            compress=args.compress,
+                            layer_chunk=layer_chunk, optim=args.optim)
     first, last = np.mean(losses[:20]), np.mean(losses[-20:])
     print(f"loss: {first:.3f} -> {last:.3f} "
           f"({'LEARNED' if last < first - 0.3 else 'check hyperparams'})")

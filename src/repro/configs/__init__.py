@@ -25,6 +25,8 @@ _ARCH_MODULES = [
     "chaos_small",
     "chaos_medium",
     "chaos_large",
+    # transformer-scale CHAOS bench net (DESIGN.md §10)
+    "lm_bench",
 ]
 
 _ALIAS = {m.replace("_", "-"): m for m in _ARCH_MODULES}

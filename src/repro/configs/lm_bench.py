@@ -1,0 +1,23 @@
+"""Dense-LM benchmark net for the transformer-scale CHAOS studies
+(DESIGN.md §10): a 2-layer GQA decoder deliberately attention-dominated
+(seq 512 >> d_model 64) so the Pallas flash kernel's end-to-end training
+win is visible in the worker-mesh cells, while the whole grid stays
+CPU-benchmark sized.  GQA (2 kv heads under 4 query heads) matters for
+more than realism: the jnp blockwise path pays a per-group gather the
+kernel's grouped grid never materialises, so this is exactly the regime
+the kernel forward earns its keep.  ``layer_chunk=1`` exposes one bucket
+per layer — embed -> layers0 -> layers1 -> final_norm — the paper's
+per-layer exchange granularity on the chunked layer stack."""
+from repro.core.types import ArchConfig
+
+CONFIG = ArchConfig(
+    name="lm-bench", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+    d_ff=128, vocab_size=256, tie_embeddings=True,
+    scan_layers=True, remat=False,
+    param_dtype="float32", layer_chunk=1,
+)
+
+
+def smoke_config() -> ArchConfig:
+    return CONFIG  # already CPU-sized

@@ -52,6 +52,42 @@ N_TRAIN = 60_000
 N_TEST = 10_000
 
 
+def dense_lm_ops(cfg, seq: int) -> dict:
+    """Per-sample (sequence) operation counts for a dense LM in the
+    paper's Table-3 unit convention (one multiply-accumulate-ish
+    "operation"): 2 ops per weight per token for the matmuls, plus the
+    causal-half ``4 * L * H * dh * T^2 / 2`` attention score/value term
+    the weights don't account for.  ``bprop`` is the usual ~2x fprop
+    (grad wrt activations + grad wrt weights)."""
+    d, dh = cfg.d_model, cfg.d_head
+    per_layer = (d * (cfg.n_heads + 2 * cfg.n_kv_heads) * dh
+                 + cfg.n_heads * dh * d + 3 * d * cfg.d_ff)
+    mats = cfg.n_layers * per_layer + d * cfg.padded_vocab
+    attn = 4 * cfg.n_layers * cfg.n_heads * dh * seq * seq // 2
+    fprop = 2 * seq * mats + attn
+    return dict(fprop=float(fprop), bprop=float(2 * fprop))
+
+
+def register_arch(key: str, *, fprop: float, bprop: float,
+                  prep: float = 1e9, epochs: int = 70) -> None:
+    """Register a non-Table-2 architecture (e.g. the dense-LM bench net)
+    so ``predict_time``/``predict_speedup`` cover it.  ``fprop``/``bprop``
+    are per-sample operation counts in the paper's units; the memory-
+    contention column is the small-CNN Table-4 column scaled by the
+    total-ops ratio (contention in the paper's model is linear in the
+    per-sample memory traffic, which tracks operation count).  Idempotent:
+    re-registering an existing key is a no-op, the Table-2 keys cannot be
+    overwritten."""
+    if key in OPS:
+        return
+    ratio = ((fprop + bprop)
+             / (OPS["small"]["fprop"] + OPS["small"]["bprop"]))
+    OPS[key] = dict(fprop=float(fprop), bprop=float(bprop), prep=prep)
+    MEM_CONTENTION[key] = {p: c * ratio
+                           for p, c in MEM_CONTENTION["small"].items()}
+    EPOCHS[key] = epochs
+
+
 def cpi(p: int) -> float:
     """Best theoretical CPI per thread (Table 3): 1-2 thr/core: 1;
     3 thr/core: 1.5; 4 thr/core: 2."""

@@ -65,8 +65,14 @@ class ArchConfig:
     n_classes: int = 10
 
     # training knobs
-    use_kernel: bool = False     # cnn: route hot path through Pallas kernels
+    use_kernel: bool = False     # route hot path through Pallas kernels
     micro_batches: int = 1       # gradient-accumulation steps per batch
+    #: LM layer-stack chunking (DESIGN.md §10): split the stacked ``layers``
+    #: leaf into ``n_layers / layer_chunk`` per-chunk param keys so
+    #: ``bucket_spec()`` exposes embed -> per-chunk -> head buckets.  0 (and
+    #: ``n_layers``) keep today's single-stack scan layout; 1 is the fully
+    #: unrolled layout; must divide ``n_layers``.
+    layer_chunk: int = 0
     param_dtype: str = "bfloat16"
     opt_moment_dtype: str = "float32"
     remat: bool = True

@@ -51,6 +51,7 @@ BASELINE = {"batch_block": 8, "row_block": None, "cout_block": None}
 BWD_BASELINE = {"batch_block": 8, "row_block": None}
 FC_BASELINE = {"batch_block": 8, "dout_block": None}
 FC_BWD_BASELINE = {"batch_block": 8}
+FLASH_BASELINE = {"block_q": 512, "block_k": 512}
 
 
 def cache_path() -> str:
@@ -263,6 +264,41 @@ def fc_bwd_candidates(x_shape, w_shape, itemsize: int = 4) -> list[dict]:
                              itemsize) <= VMEM_BUDGET_BYTES:
             cands.append(cfg)
     return _dedup(cands)
+
+
+def flash_vmem_bytes(cfg, q_shape, k_shape) -> int:
+    """Bytes per grid step of the flash forward: q/k/v tiles, the (bq, bk)
+    score tile, and the fp32 (m, l, acc) scratch."""
+    D, Dv = q_shape[3], k_shape[3]
+    bq = min(cfg["block_q"], q_shape[2])
+    bk = min(cfg["block_k"], k_shape[2])
+    return 4 * (bq * D + bk * D + bk * Dv + bq * bk + bq * (Dv + 2))
+
+
+def flash_candidates(q_shape, k_shape) -> list[dict]:
+    """(block_q, block_k) candidates: power-of-two tiles up to the sequence
+    lengths (the kernel clamps to Tq/Tk and pads non-divisors), pruned by
+    VMEM footprint; the 512x512 baseline is always included."""
+    Tq, Tk = q_shape[2], k_shape[2]
+    sizes_q = sorted({min(s, Tq) for s in (64, 128, 256, 512)})
+    sizes_k = sorted({min(s, Tk) for s in (64, 128, 256, 512)})
+    cands = [dict(FLASH_BASELINE)]
+    for bq in sizes_q:
+        for bk in sizes_k:
+            cfg = {"block_q": bq, "block_k": bk}
+            if flash_vmem_bytes(cfg, q_shape, k_shape) <= VMEM_BUDGET_BYTES:
+                cands.append(cfg)
+    return _dedup(cands)
+
+
+def get_flash_config(q_shape, k_shape, dtype, *, interpret: bool) -> dict:
+    """Tuned (block_q, block_k) for the flash forward at kernel-layout
+    shapes q (B, Hq, Tq, D) / k (B, Hkv, Tk, Dv); baseline when untuned."""
+    entry = lookup(key_for("flash_fwd", (q_shape, k_shape), dtype,
+                           interpret=interpret))
+    if entry is not None:
+        return entry["config"]
+    return dict(FLASH_BASELINE)
 
 
 def _dedup(cands: list[dict]) -> list[dict]:
@@ -504,6 +540,57 @@ def tune_fc_bwd(x, dy, w, y=None, *, interpret: bool = True, iters: int = 3,
                   "baseline_us": measured[json.dumps(dict(FC_BWD_BASELINE),
                                                      sort_keys=True)],
                   "candidates": measured}
+
+
+def tune_flash_attention(q, k, v, *, causal: bool = True,
+                         interpret: bool = True, iters: int = 3,
+                         max_candidates: int | None = None):
+    """Measure (block_q, block_k) candidates for the Pallas flash forward
+    (q, k, v in kernel layout (B, H, T, D)); cache + return
+    ``(best_config, report)``.  Same contract as the conv/FC tuners: the
+    512x512 baseline is always measured, so ``best_us <= baseline_us``."""
+    from repro.kernels import flash_attention as FA
+
+    key = key_for("flash_fwd", (q.shape, k.shape), q.dtype,
+                  interpret=interpret)
+    cands = flash_candidates(q.shape, k.shape)
+    if max_candidates:
+        cands = cands[:max_candidates]
+    measured = {}
+    for cfg in cands:
+        fn = jax.jit(lambda q, k, v, cfg=cfg: FA.flash_attention_fwd(
+            q, k, v, causal=causal, interpret=interpret, **cfg))
+        measured[json.dumps(cfg, sort_keys=True)] = _time_us(
+            fn, q, k, v, iters=iters)
+    best_key = min(measured, key=measured.get)
+    best = json.loads(best_key)
+    record(key, best, measured[best_key], measured, iters=iters)
+    return best, {"key": key, "best_us": measured[best_key],
+                  "baseline_us": measured[json.dumps(dict(FLASH_BASELINE),
+                                                     sort_keys=True)],
+                  "candidates": measured}
+
+
+def tune_lm_attention(cfg, batch: int, seq: int, *, iters: int = 1,
+                      interpret: bool | None = None):
+    """Tune the flash forward at an LM config's training attention shape —
+    exactly the cache key ``flash_attention_train`` looks up (q is
+    (batch, n_heads, seq, d_head) after the BTHD -> BHTD transpose).  The
+    worker mesh runs per-shard batches, so callers pass the per-shard
+    batch.  Returns the list of cache keys written."""
+    if interpret is None:
+        from repro.kernels import ops as kops
+        interpret = kops._interpret()
+    dtype = jnp.dtype(cfg.param_dtype)
+    kk = jax.random.key(0)
+    q = jax.random.normal(kk, (batch, cfg.n_heads, seq, cfg.d_head), dtype)
+    k = jax.random.normal(kk, (batch, cfg.n_kv_heads, seq, cfg.d_head),
+                          dtype)
+    v = jax.random.normal(kk, (batch, cfg.n_kv_heads, seq, cfg.d_head),
+                          dtype)
+    _, rep = tune_flash_attention(q, k, v, causal=True, iters=iters,
+                                  interpret=interpret)
+    return [rep["key"]]
 
 
 def tune_cnn_net(cfg, batch: int, *, iters: int = 1,

@@ -33,9 +33,9 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _fa_kernel(off_ref, q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
-               scale: float, causal: bool, block_q: int, block_k: int,
-               n_kv: int, seq_len: int):
+def _fa_kernel(off_ref, q_ref, k_ref, v_ref, o_ref, lse_ref, m_sc, l_sc,
+               acc_sc, *, scale: float, causal: bool, block_q: int,
+               block_k: int, n_kv: int, seq_len: int):
     qi = pl.program_id(2)
     ki = pl.program_id(3)
     q_off = off_ref[0, 0]
@@ -92,13 +92,21 @@ def _fa_kernel(off_ref, q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
         l = l_sc[...]
         l = jnp.where(l == 0.0, 1.0, l)
         o_ref[0, 0] = (acc_sc[...] / l[:, None]).astype(o_ref.dtype)
+        # log-sum-exp of the (scaled) scores per query row — the training
+        # backward's softmax denominator (models/layers.py::_flash_bwd
+        # recomputes p = exp(s - lse) per block from it, so the kernel
+        # forward needs NO jnp-forward recompute in its VJP)
+        lse_ref[0, 0] = m_sc[...] + jnp.log(l)
 
 
 def flash_attention_fwd(q, k, v, *, causal: bool = True, q_offset=0,
                         softmax_scale=None, block_q: int = 512,
-                        block_k: int = 512, interpret: bool = True):
+                        block_k: int = 512, interpret: bool = True,
+                        return_lse: bool = False):
     """q: (B, Hq, Tq, D); k, v: (B, Hkv, Tk, D/Dv) — GQA by head grouping.
-    Returns (B, Hq, Tq, Dv).
+    Returns (B, Hq, Tq, Dv); with ``return_lse`` also the per-row
+    log-sum-exp (B, Hkv, G, Tq) f32 in the models/layers convention (the
+    flash backward's residual).
 
     ``q_offset`` (python int or traced int32 scalar) is the absolute cache
     position of query row 0: the causal mask admits ``k_pos <= q_offset +
@@ -144,9 +152,16 @@ def flash_attention_fwd(q, k, v, *, causal: bool = True, q_offset=0,
                 pl.BlockSpec((1, 1, block_k, Dv),
                              lambda b, h, i, j: (b, h, j, 0)),
             ],
-            out_specs=pl.BlockSpec((1, 1, block_q, Dv),
-                                   lambda b, h, i, j: (b, h, i, 0)),
-            out_shape=jax.ShapeDtypeStruct((B, Hkv, Tq + pad_q, Dv), q.dtype),
+            out_specs=[
+                pl.BlockSpec((1, 1, block_q, Dv),
+                             lambda b, h, i, j: (b, h, i, 0)),
+                pl.BlockSpec((1, 1, block_q),
+                             lambda b, h, i, j: (b, h, i)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((B, Hkv, Tq + pad_q, Dv), q.dtype),
+                jax.ShapeDtypeStruct((B, Hkv, Tq + pad_q), jnp.float32),
+            ],
             scratch_shapes=[
                 pltpu.VMEM((block_q,), jnp.float32),
                 pltpu.VMEM((block_q,), jnp.float32),
@@ -156,5 +171,74 @@ def flash_attention_fwd(q, k, v, *, causal: bool = True, q_offset=0,
         )(off, qg, k, v)
 
     outs = [one_group(qf[:, :, g]) for g in range(G)]
-    out = jnp.stack(outs, axis=2).reshape(B, Hq, Tq + pad_q, Dv)
-    return out[:, :, :Tq]
+    out = jnp.stack([o for o, _ in outs], axis=2)
+    out = out.reshape(B, Hq, Tq + pad_q, Dv)[:, :, :Tq]
+    if not return_lse:
+        return out
+    lse = jnp.stack([l for _, l in outs], axis=2)[:, :, :, :Tq]
+    return out, lse
+
+
+# ---------------------------------------------------------------------------
+# Training-grade flash attention: Pallas forward + a real backward
+# ---------------------------------------------------------------------------
+# The forward launches the kernel above with autotuned (block_q, block_k)
+# and also emits the per-row log-sum-exp; the custom VJP saves (q, k, v,
+# out, lse) — exactly the jnp flash path's residual set — and the backward
+# runs the blockwise flash backward from models/layers.py directly, with
+# NO forward recompute.  One shared backward implementation keeps the two
+# paths' gradients bit-comparable while the kernel carries the forward.
+
+_BWD_BLOCK_K = 1024  # the jnp backward's kv block (layers.py default)
+
+
+def _ft_impl(q, k, v, causal, scale, block_q, block_k, interpret):
+    qT, kT, vT = (x.transpose(0, 2, 1, 3) for x in (q, k, v))
+    out, lse = flash_attention_fwd(qT, kT, vT, causal=causal, q_offset=0,
+                                   softmax_scale=scale, block_q=block_q,
+                                   block_k=block_k, interpret=interpret,
+                                   return_lse=True)
+    return out.transpose(0, 2, 1, 3), lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_train(q, k, v, causal, scale, block_q, block_k, interpret):
+    out, _ = _ft_impl(q, k, v, causal, scale, block_q, block_k, interpret)
+    return out
+
+
+def _ft_fwd(q, k, v, causal, scale, block_q, block_k, interpret):
+    out, lse = _ft_impl(q, k, v, causal, scale, block_q, block_k, interpret)
+    return out, (q, k, v, out, lse)
+
+
+def _ft_bwd(causal, scale, block_q, block_k, interpret, res, dout):
+    from repro.models import layers as L  # deferred: no import cycle
+    q, k, v, out, lse = res
+    off = jnp.zeros((), jnp.int32)
+    dq, dk, dv, _ = L._flash_bwd(causal, _BWD_BLOCK_K, scale,
+                                 (q, k, v, out, lse, off), dout)
+    return dq, dk, dv
+
+
+_flash_train.defvjp(_ft_fwd, _ft_bwd)
+
+
+def flash_attention_train(q, k, v, *, causal: bool = True,
+                          softmax_scale=None):
+    """Differentiable Pallas flash attention for the LM *training* forward
+    (``ArchConfig.use_kernel``): q, k, v in the models/layers (B, T, H, D)
+    convention, GQA by head grouping.  Block sizes come from the autotuner
+    (``kernels/autotune.py::get_flash_config``, tuned by ``benchmarks/run.py
+    --only kernels``), falling back to the 512x512 baseline."""
+    from repro.kernels import autotune as AT
+    from repro.kernels.ops import _interpret
+    B, Tq, Hq, D = q.shape
+    scale = (softmax_scale if softmax_scale is not None
+             else 1.0 / math.sqrt(D))
+    interp = _interpret()
+    q_shape = (B, Hq, Tq, D)
+    k_shape = (B, k.shape[2], k.shape[1], k.shape[3])
+    cfg = AT.get_flash_config(q_shape, k_shape, q.dtype, interpret=interp)
+    return _flash_train(q, k, v, causal, scale, cfg["block_q"],
+                        cfg["block_k"], interp)

@@ -175,6 +175,45 @@ fc_bias.defvjp(_fb_fwd, _fb_bwd)
 
 
 # ---------------------------------------------------------------------------
+# Saved-activation backward entry points (models/cnn.py shard tape)
+# ---------------------------------------------------------------------------
+# The worker-mesh bucket tape checkpoints every layer's output during its
+# forward pass, so its backward can call the fused backward kernels
+# DIRECTLY with the saved activations instead of re-linearising the layer
+# (``jax.vjp`` re-runs the forward to rebuild residuals).  These are the
+# exact same kernel launches the custom-VJP wrappers above issue — same
+# configs, same casts — so the tape's gradients stay bit-comparable.
+
+
+def conv2d_bias_tanh_bwd(x, w, b, y, dy):
+    """Fused (dx, dw, db) for ``conv2d_bias_tanh`` from the saved output
+    ``y`` — one launch, no forward recompute."""
+    dx, dw, db = K.conv2d_bwd_fused(x, dy, w, y, interpret=_interpret(),
+                                    **_bwd_cfg(x, w, "dtanh"))
+    return dx.astype(x.dtype), dw.astype(w.dtype), db.astype(b.dtype)
+
+
+def fc_bias_tanh_bwd(x, w, b, y, dy):
+    """Fused (dx, dw, db) for ``fc_bias_tanh`` from the saved output."""
+    dx, dw, db = FC.fc_bwd_fused(x, dy, w, y, interpret=_interpret(),
+                                 **_fcb_cfg(x, w, "dtanh"))
+    return dx.astype(x.dtype), dw.astype(w.dtype), db.astype(b.dtype)
+
+
+def fc_bias_bwd(x, w, b, dy):
+    """Fused (dx, dw, db) for the linear ``fc_bias`` output layer."""
+    dx, dw, db = FC.fc_bwd_fused(x, dy, w, interpret=_interpret(),
+                                 **_fcb_cfg(x, w, "plain"))
+    return dx.astype(x.dtype), dw.astype(w.dtype), db.astype(b.dtype)
+
+
+def maxpool2d_vjp_saved(x, y, dy, k: int):
+    """``maxpool2d`` backward from the saved (x, y) pair — the same single
+    Pallas launch the custom VJP issues."""
+    return P.maxpool2d_bwd(x, y, dy, k, interpret=_interpret())
+
+
+# ---------------------------------------------------------------------------
 # Fused softmax-cross-entropy: per-sample loss, dlogits saved as residual
 # so the backward costs ZERO extra launches
 # ---------------------------------------------------------------------------

@@ -234,7 +234,8 @@ def train(arch: str, steps: int, sync_mode: str = "bsp", batch: int = 8,
           inject_seed: int = 0, metrics_out: str | None = None,
           evict_stragglers: bool = False, readmit_after: int | None = None,
           collective_delay: float = 0.0, interleave: bool = False,
-          micro_batches: int | None = None):
+          micro_batches: int | None = None,
+          layer_chunk: int | None = None):
     if superstep < 1:
         raise ValueError(f"superstep must be >= 1, got {superstep}")
     plan = FaultPlan.from_spec(inject, seed=inject_seed)
@@ -243,6 +244,8 @@ def train(arch: str, steps: int, sync_mode: str = "bsp", batch: int = 8,
         cfg = dataclasses.replace(cfg, use_kernel=True)
     if micro_batches is not None:
         cfg = dataclasses.replace(cfg, micro_batches=micro_batches)
+    if layer_chunk is not None:
+        cfg = dataclasses.replace(cfg, layer_chunk=layer_chunk)
     optimizer = make_optimizer(cfg, base_lr=base_lr, total_steps=steps,
                                kind=optim)
     put = None
@@ -473,6 +476,12 @@ def main():
                     help="override the arch's micro-batch accumulation "
                          "count (single-instance route; composes with "
                          "--layerwise via the bucket-granular accumulator)")
+    ap.add_argument("--layer-chunk", type=int, default=None,
+                    help="LM layer-stack chunk size (DESIGN.md §10): split "
+                         "the scanned layer stack into n_layers/c per-chunk "
+                         "param buckets so --layerwise/--interleave exchange "
+                         "at chunk granularity; 0 keeps the single-stack "
+                         "scan layout, must divide n_layers")
     args = ap.parse_args()
     _, losses = train(args.arch, args.steps, args.sync, args.batch, args.seq,
                       args.ckpt_dir, args.ckpt_every, args.die_at_step,
@@ -488,7 +497,8 @@ def main():
                       readmit_after=args.readmit_after,
                       collective_delay=args.collective_delay,
                       interleave=args.interleave,
-                      micro_batches=args.micro_batches)
+                      micro_batches=args.micro_batches,
+                      layer_chunk=args.layer_chunk)
     print(f"[train] done: first-10 mean {np.mean(losses[:10]):.4f} -> "
           f"last-10 mean {np.mean(losses[-10:]):.4f}")
 

@@ -174,6 +174,77 @@ def _layer_fns(cfg: ArchConfig, uk: bool):
     return out
 
 
+def _layer_bwd_fns(cfg: ArchConfig, uk: bool):
+    """Saved-activation backward closure per layer, forward order (matching
+    ``_layer_fns``): ``bwd(p, x, y, g) -> (dp, dx)`` for parameterised
+    layers, ``bwd(x, y, g) -> dx`` for pool.  ``x``/``y`` are the layer's
+    checkpointed input/output activations, so no closure re-runs the
+    forward: the kernel path calls the fused backward kernels directly
+    (``kernels/ops.py`` saved-activation entry points) and the XLA path
+    applies the exact tanh VJP rule ``g * (1 - y*y)`` plus
+    ``jax.linear_transpose`` of the linear conv/matmul — the same
+    primitives ``jax.vjp`` would emit, minus the primal recompute."""
+    if uk:
+        from repro.kernels import ops as kops
+    shapes = _trace_shapes(cfg)
+    dn = ("NHWC", "HWIO", "NHWC")
+    out = []
+    for i, (kind, k, _, cin, cout) in enumerate(shapes):
+        if kind == "conv":
+            if uk:
+                def bwd(p, x, y, g):
+                    dx, dw, db = kops.conv2d_bias_tanh_bwd(
+                        x, p["w"], p["b"], y, g)
+                    return {"w": dw, "b": db}, dx
+            else:
+                def bwd(p, x, y, g):
+                    g = g * (1.0 - y * y)
+                    conv_x = lambda x_: jax.lax.conv_general_dilated(
+                        x_, p["w"], (1, 1), "VALID", dimension_numbers=dn)
+                    conv_w = lambda w_: jax.lax.conv_general_dilated(
+                        x, w_, (1, 1), "VALID", dimension_numbers=dn)
+                    (dx,) = jax.linear_transpose(conv_x, x)(g)
+                    (dw,) = jax.linear_transpose(conv_w, p["w"])(g)
+                    return ({"w": dw.astype(p["w"].dtype),
+                             "b": g.sum((0, 1, 2)).astype(p["b"].dtype)},
+                            dx.astype(x.dtype))
+            out.append(bwd)
+        elif kind == "pool":
+            if k > 1:
+                if uk:
+                    bwd = lambda x, y, g, k=k: kops.maxpool2d_vjp_saved(
+                        x, y, g, k)
+                else:
+                    def bwd(x, y, g, k=k):
+                        pool = lambda x_: jax.lax.reduce_window(
+                            x_, -jnp.inf, jax.lax.max, (1, k, k, 1),
+                            (1, k, k, 1), "VALID")
+                        _, vjp = jax.vjp(pool, x)
+                        (dx,) = vjp(g)
+                        return dx
+                out.append(bwd)
+        else:
+            last = i == len(shapes) - 1
+
+            def bwd(p, x, y, g, last=last):
+                xf = x.reshape(x.shape[0], -1) if x.ndim > 2 else x
+                if uk:
+                    if last:
+                        dxf, dw, db = kops.fc_bias_bwd(xf, p["w"], p["b"], g)
+                    else:
+                        dxf, dw, db = kops.fc_bias_tanh_bwd(
+                            xf, p["w"], p["b"], y, g)
+                else:
+                    if not last:
+                        g = g * (1.0 - y * y)
+                    dw = (xf.T @ g).astype(p["w"].dtype)
+                    db = g.sum(0).astype(p["b"].dtype)
+                    dxf = (g @ p["w"].T).astype(x.dtype)
+                return {"w": dw, "b": db}, dxf.reshape(x.shape)
+            out.append(bwd)
+    return out
+
+
 def loss_and_bucket_grads(params, batch, cfg: ArchConfig, tape,
                           use_kernel: bool | None = None):
     """The paper's §3 update rule as a **bucket tape** (DESIGN.md §6):
@@ -246,12 +317,17 @@ def loss_and_shard_bucket_grads(params, shards, cfg: ArchConfig, on_bucket,
     exactly — ``(losses (s,), metrics {(s,)}, grads {layer: (s, ...) f32})``
     — because every per-shard computation runs through the same per-shard
     ``lax.map`` bodies with the same layer closures (``_layer_fns``); only
-    the *schedule* differs: the forward saves each layer's stacked input
-    activations, and the backward re-linearises one layer at a time
-    (recomputing that layer's forward — same primitives, same inputs, same
-    bits) so ``on_bucket(bucket, {layer: dp_stacked})`` can issue that
-    bucket's exchange collective while the remaining layers' backward is
-    still to run.  ``on_bucket`` returns an ordering token (or None); the
+    the *schedule* differs: the forward checkpoints each layer's stacked
+    input AND output activations (outputs are free — layer i's output is
+    layer i+1's input, already live), and the backward consumes the saved
+    pair through ``_layer_bwd_fns`` — fused backward kernels fed the saved
+    output directly on the kernel path, the exact tanh VJP rule plus
+    ``jax.linear_transpose`` on the XLA path — so no layer's forward is
+    re-run during the walk (the PR 7 tape re-linearised every layer with
+    ``jax.vjp``, ~15 ms/step of recompute on the forced-host mesh) and
+    ``on_bucket(bucket, {layer: dp_stacked})`` can issue that bucket's
+    exchange collective while the remaining layers' backward is still to
+    run.  ``on_bucket`` returns an ordering token (or None); the
     token is tied into the downstream cotangent WITHOUT changing its value
     (``core/chaos.py::delay_tie``), pinning the collective's issue point
     into the backward walk so XLA cannot sink it to the end of the step.
@@ -263,13 +339,13 @@ def loss_and_shard_bucket_grads(params, shards, cfg: ArchConfig, on_bucket,
     labels = shards["labels"]
 
     xs = shards["images"]
-    acts = []  # per layer: the stacked (s, b, ...) INPUT activations
+    acts = [xs]  # acts[i] / acts[i+1] = layer i's stacked input / output
     for name, fn in layers:
-        acts.append(xs)
         if name is None:
             xs = jax.lax.map(fn, xs)
         else:
             xs = jax.lax.map(lambda x, p=params[name], fn=fn: fn(p, x), xs)
+        acts.append(xs)
 
     if uk:
         from repro.kernels import ops as kops
@@ -296,23 +372,20 @@ def loss_and_shard_bucket_grads(params, shards, cfg: ArchConfig, on_bucket,
                "aux": jnp.zeros_like(losses)}
 
     grads = {}
-    for (name, fn), x_in in zip(reversed(layers), reversed(acts)):
+    bwds = _layer_bwd_fns(cfg, uk)
+    for (name, _fn), bwd, x_in, y_out in zip(
+            reversed(layers), reversed(bwds),
+            reversed(acts[:-1]), reversed(acts[1:])):
         if name is None:
-            def bwd_pool(args, fn=fn):
-                x, g = args
-                _, vjp = jax.vjp(fn, x)
-                (dx,) = vjp(g)
-                return dx
-            dy = jax.lax.map(bwd_pool, (x_in, dy))
+            dy = jax.lax.map(lambda a, bwd=bwd: bwd(*a), (x_in, y_out, dy))
             continue
 
-        def bwd_layer(args, fn=fn, p=params[name]):
-            x, g = args
-            _, vjp = jax.vjp(fn, p, x)
-            dp, dx = vjp(g)
+        def bwd_layer(args, bwd=bwd, p=params[name]):
+            x, y, g = args
+            dp, dx = bwd(p, x, y, g)
             return jax.tree.map(lambda t: t.astype(jnp.float32), dp), dx
 
-        dp, dy = jax.lax.map(bwd_layer, (x_in, dy))
+        dp, dy = jax.lax.map(bwd_layer, (x_in, y_out, dy))
         grads[name] = dp
         dy = delay_tie(dy, on_bucket(buckets[name], {name: dp}))
     return losses, metrics, grads

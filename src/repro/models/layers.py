@@ -20,6 +20,7 @@ from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 
@@ -223,12 +224,12 @@ def _flash_fwd_impl(q, k, v, causal, q_offset, block_k, scale):
 
 def _flash_fwd(q, k, v, causal, q_offset, block_k, scale):
     out, lse = _flash_fwd_impl(q, k, v, causal, q_offset, block_k, scale)
-    return out, (q, k, v, out, lse)
+    return out, (q, k, v, out, lse, q_offset)
 
 
-def _flash_bwd(causal, q_offset, block_k, scale, res, dout):
+def _flash_bwd(causal, block_k, scale, res, dout):
     """Flash backward: recompute p per block from saved lse — O(T) memory."""
-    q, k, v, out, lse = res
+    q, k, v, out, lse, q_offset = res
     B, Tq, Hq, D = q.shape
     Tk, Hkv, Dv = k.shape[1], k.shape[2], v.shape[3]
     G = Hq // Hkv
@@ -265,13 +266,15 @@ def _flash_bwd(causal, q_offset, block_k, scale, res, dout):
     dq = dq.reshape(B, Tq, Hq, D).astype(q.dtype)
     dk = dk_blks.reshape(B, n_blocks * block_k, Hkv, D)[:, :Tk].astype(k.dtype)
     dv = dv_blks.reshape(B, n_blocks * block_k, Hkv, Dv)[:, :Tk].astype(v.dtype)
-    return dq, dk, dv
+    # q_offset is integer-valued: its cotangent is the symbolic float0 zero
+    d_off = np.zeros(np.shape(q_offset), dtype=jax.dtypes.float0)
+    return dq, dk, dv, d_off
 
 
 from functools import partial as _partial
 
 
-@_partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+@_partial(jax.custom_vjp, nondiff_argnums=(3, 5, 6))
 def _flash(q, k, v, causal, q_offset, block_k, scale):
     out, _ = _flash_fwd_impl(q, k, v, causal, q_offset, block_k, scale)
     return out
@@ -280,7 +283,7 @@ def _flash(q, k, v, causal, q_offset, block_k, scale):
 _flash.defvjp(_flash_fwd, _flash_bwd)
 
 
-def flash_attention(q, k, v, *, causal: bool, q_offset: int = 0,
+def flash_attention(q, k, v, *, causal: bool, q_offset=0,
                     block_k: int = 1024, softmax_scale: Optional[float] = None):
     """Blockwise flash attention with a flash *backward* (custom VJP):
     only (q, k, v, out, lse) are saved; per-block score matrices are
@@ -291,18 +294,17 @@ def flash_attention(q, k, v, *, causal: bool, q_offset: int = 0,
 
     ``q_offset`` is the absolute cache position of query row 0 (causal mask
     admits ``k_pos <= q_offset + row``): a python int (training / static
-    prefill — differentiable via the flash custom VJP), a traced int32
-    scalar (batched prefill of a continued sequence at a dynamic cache
-    position), or a (B,) int32 vector (one serving decode dispatch over
-    cache slots at different write cursors).  Non-int offsets take the
-    forward-only path — a traced value cannot ride custom_vjp
-    nondiff_argnums, and the serving paths never differentiate."""
+    prefill), a traced int32 scalar (batched prefill of a continued
+    sequence at a dynamic cache position), or a (B,) int32 vector (one
+    serving decode dispatch over cache slots at different write cursors).
+    Every form rides the flash custom VJP as an int32 *array* argument
+    whose cotangent is the symbolic float0 zero — so ``jax.grad`` through
+    any offset form takes the real flash backward (training at a cache
+    offset works; tracers no longer fall off onto a forward-only impl)."""
     D = q.shape[-1]
     scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
-    if isinstance(q_offset, int):
-        return _flash(q, k, v, causal, q_offset, block_k, scale)
-    out, _ = _flash_fwd_impl(q, k, v, causal, q_offset, block_k, scale)
-    return out
+    off = jnp.asarray(q_offset, jnp.int32)
+    return _flash(q, k, v, causal, off, block_k, scale)
 
 
 def decode_attention(q, k_cache, v_cache, cache_len, *,

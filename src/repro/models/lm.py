@@ -121,17 +121,76 @@ def _layer_params(cfg: ArchConfig, f, shape0=()):
     return p
 
 
+def n_layer_chunks(cfg: ArchConfig) -> int:
+    """Number of layer-stack chunks under ``cfg.layer_chunk`` (DESIGN.md
+    §10).  0 and ``n_layers`` both mean the whole-stack layout (ONE chunk,
+    param key ``layers`` — byte-identical to the pre-chunking layout);
+    any other value must divide ``n_layers``."""
+    c = cfg.layer_chunk
+    if c in (0, cfg.n_layers):
+        return 1
+    if c < 0 or cfg.n_layers % c:
+        raise ValueError(
+            f"layer_chunk={c} must be 0 or a positive divisor of "
+            f"n_layers={cfg.n_layers}")
+    return cfg.n_layers // c
+
+
+def chunk_keys(cfg: ArchConfig) -> tuple:
+    """Top-level param keys holding the layer stack, in production order:
+    ``("layers",)`` for the whole-stack layout, else ``layers0..layersM-1``
+    each stacking ``layer_chunk`` consecutive layers."""
+    m = n_layer_chunks(cfg)
+    if m == 1:
+        return ("layers",)
+    return tuple(f"layers{i}" for i in range(m))
+
+
+def layer_stack(params: dict, cfg: ArchConfig):
+    """The full ``(n_layers, ...)`` stacked layer tree, concatenating chunk
+    stacks when the params are in a chunked layout (decode / rechunk)."""
+    if "layers" in params:
+        return params["layers"]
+    keys = chunk_keys(cfg)
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0),
+                        *[params[k] for k in keys])
+
+
+def rechunk_params(params: dict, cfg: ArchConfig, layer_chunk: int) -> dict:
+    """Convert a params tree between ``layer_chunk`` layouts (checkpoint
+    portability: ``CheckpointManager.restore`` validates leaf shapes against
+    its template, so a checkpoint written at one chunking must be rechunked
+    — concat + re-split along the layer axis — before training at another).
+    Non-layer keys pass through untouched."""
+    import dataclasses as _dc
+    stack = layer_stack(params, cfg)
+    out = {k: v for k, v in params.items()
+           if k != "layers" and not (k.startswith("layers") and
+                                     k[len("layers"):].isdigit())}
+    new_cfg = _dc.replace(cfg, layer_chunk=layer_chunk)
+    keys = chunk_keys(new_cfg)
+    if len(keys) == 1:
+        out["layers"] = stack
+        return out
+    c = cfg.n_layers // len(keys)
+    for m, k in enumerate(keys):
+        out[k] = jax.tree.map(lambda a, m=m: a[m * c:(m + 1) * c], stack)
+    return out
+
+
 def bucket_spec(cfg: ArchConfig) -> tuple:
-    """ParamBuckets (DESIGN.md §6) in production (forward) order: the token
-    embedding produces activations first, the scanned layer stack last
-    before the norm/output head.  The whole ``layers`` stack is ONE bucket —
-    per-layer params live stacked along a leading ``n_layers`` axis inside a
-    single leaf (``lax.scan`` layout), so the stack is the finest
-    exchange/update granularity the layout admits."""
+    """ParamBuckets (DESIGN.md §6, §10) in production (forward) order: the
+    token embedding produces activations first, then each layer-stack chunk,
+    then the norm/output head.  With ``layer_chunk == 0`` the whole
+    ``layers`` stack is ONE bucket (per-layer params live stacked along a
+    leading ``n_layers`` axis inside a single leaf — the ``lax.scan``
+    layout); ``layer_chunk == c`` splits the stack into ``n_layers/c``
+    per-chunk buckets, the granularity at which the worker mesh exchanges,
+    compresses, and non-instantly updates LM gradients."""
     order = ["embed"]
     if cfg.family == "vlm":
         order.append("patch_proj")
-    order += ["layers", "final_norm"]
+    order += list(chunk_keys(cfg)) + ["final_norm"]
     if not cfg.tie_embeddings:
         order.append("out_embed")
     return tuple(ParamBucket(name=k, keys=(k,), index=i)
@@ -143,8 +202,13 @@ def build_params(cfg: ArchConfig, f):
     params = {
         "embed": f.array((Vp, d), ("tp", "fsdp"), scale=0.02),
         "final_norm": f.array((d,), None, mode="ones"),
-        "layers": _layer_params(cfg, f, (cfg.n_layers,)),
     }
+    keys = chunk_keys(cfg)
+    if len(keys) == 1:
+        params["layers"] = _layer_params(cfg, f, (cfg.n_layers,))
+    else:
+        for k in keys:
+            params[k] = _layer_params(cfg, f, (cfg.layer_chunk,))
     if not cfg.tie_embeddings:
         params["out_embed"] = f.array((Vp, d), ("tp", "fsdp"), scale=0.02)
     if cfg.family == "vlm":
@@ -175,7 +239,13 @@ def _gqa_attention(p, x, cfg: ArchConfig, positions, kv_cache=None,
     k = L.rope(k, positions, cfg.rope_theta)
     if kv_cache is None:
         q = constrain(q, "dp", "sp", None, None)
-        o = L.flash_attention(q, k, v, causal=True)
+        if use_kernel:
+            # training-grade Pallas flash attention: kernel forward with a
+            # real backward (recompute-bwd custom VJP, autotuned blocks)
+            from repro.kernels.flash_attention import flash_attention_train
+            o = flash_attention_train(q, k, v, causal=True)
+        else:
+            o = L.flash_attention(q, k, v, causal=True)
         new_kv = None
     else:
         ck, cv = kv_cache
@@ -350,27 +420,38 @@ def _block(p, x, cfg: ArchConfig, positions, kv_cache=None, cache_len=None,
 # ---------------------------------------------------------------------------
 # Full model
 # ---------------------------------------------------------------------------
-def _stack_forward(params, x, cfg: ArchConfig, positions):
-    """Run all layers (training / prefill path, no cache)."""
-    if cfg.scan_layers:
+def _chunk_forward(stack, x, aux, cfg: ArchConfig, positions,
+                   use_kernel: bool = False):
+    """Run one stacked chunk of layers: ``lax.scan`` when the config scans
+    and the chunk holds more than one layer, else an unrolled python loop
+    (so ``layer_chunk=1`` is bit-identical to the unrolled layout)."""
+    c = jax.tree.leaves(stack)[0].shape[0]
+    f = lambda lp_, h_: _block(lp_, h_, cfg, positions,
+                               use_kernel=use_kernel)[:2]
+    if cfg.remat:
+        f = jax.checkpoint(f)
+    if cfg.scan_layers and c > 1:
         def body(carry, lp):
-            h, aux = carry
-            f = lambda lp_, h_: _block(lp_, h_, cfg, positions)[:2]
-            if cfg.remat:
-                f = jax.checkpoint(f)
-            h, a = f(lp, h)
-            return (h, aux + a), None
-        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
-                                   params["layers"])
+            h, a = carry
+            h, ai = f(lp, h)
+            return (h, a + ai), None
+        (x, aux), _ = jax.lax.scan(body, (x, aux), stack)
     else:
-        aux = jnp.zeros((), jnp.float32)
-        f = lambda lp_, h_: _block(lp_, h_, cfg, positions)[:2]
-        if cfg.remat:
-            f = jax.checkpoint(f)
-        for i in range(cfg.n_layers):
-            lp = jax.tree.map(lambda a, i=i: a[i], params["layers"])
-            x, a = f(lp, x)
-            aux = aux + a
+        for i in range(c):
+            lp = jax.tree.map(lambda a, i=i: a[i], stack)
+            x, ai = f(lp, x)
+            aux = aux + ai
+    return x, aux
+
+
+def _stack_forward(params, x, cfg: ArchConfig, positions,
+                   use_kernel: bool = False):
+    """Run all layers (training / prefill path, no cache), chunk by chunk
+    in production order (one chunk total under the whole-stack layout)."""
+    aux = jnp.zeros((), jnp.float32)
+    for key in chunk_keys(cfg):
+        x, aux = _chunk_forward(params[key], x, aux, cfg, positions,
+                                use_kernel)
     return x, aux
 
 
@@ -386,15 +467,18 @@ def logits_fn(params, x, cfg: ArchConfig):
 
 
 def forward(params, tokens, cfg: ArchConfig, patch_embeds=None,
-            return_hidden: bool = False):
-    """Training / prefill forward.  tokens: (B, T) int32."""
+            return_hidden: bool = False, use_kernel: bool | None = None):
+    """Training / prefill forward.  tokens: (B, T) int32.  ``use_kernel``
+    (default: ``cfg.use_kernel``) routes GQA attention through the
+    trainable Pallas flash kernel."""
+    uk = cfg.use_kernel if use_kernel is None else use_kernel
     x = embed_tokens(params, tokens, cfg)
     if cfg.family == "vlm" and patch_embeds is not None:
         pe = patch_embeds @ params["patch_proj"]
         x = jnp.concatenate([pe.astype(x.dtype), x], axis=1)
     T = x.shape[1]
     positions = jnp.arange(T)[None, :]
-    x, aux = _stack_forward(params, x, cfg, positions)
+    x, aux = _stack_forward(params, x, cfg, positions, use_kernel=uk)
     x = L.rms_norm(x, params["final_norm"])
     if cfg.family == "vlm" and patch_embeds is not None:
         x = x[:, patch_embeds.shape[1]:]
@@ -410,6 +494,126 @@ def loss_fn(params, batch, cfg: ArchConfig):
     out = params.get("out_embed", params["embed"])
     ce = L.fused_ce(x, out, batch["labels"], cfg.vocab_size)
     return ce + 0.01 * aux, {"ce": ce, "aux": aux}
+
+
+def loss_and_shard_bucket_grads(params, shards, cfg: ArchConfig, on_bucket):
+    """Worker-mesh interleaved tape for the LM family (DESIGN.md §8, §10):
+    the chunked backward walk over a stack of micro-shards, firing
+    ``on_bucket`` the moment each bucket's STACKED gradient is produced.
+
+    ``shards`` is the token batch pytree with a leading ``(s, b, T)``
+    micro-shard axis.  Output matches ``lax.map(value_and_grad(loss_fn))``
+    over that axis to ~1 ulp — the forward runs chunk by chunk saving each
+    chunk's stacked input activations, then the backward re-linearises one
+    chunk at a time (with ``cfg.remat`` the whole-graph backward recomputes
+    blocks anyway, so the tape's extra forward is the remat recompute it
+    replaces) so ``on_bucket(bucket, {key: dp_stacked})`` can issue that
+    chunk's exchange collective while earlier chunks' backward is still to
+    run.  Bucket firing order is reverse-production: out_embed (untied) ->
+    final_norm -> chunks descending -> embed, with the tied-CE embedding
+    contribution folded into the embed bucket.  ``on_bucket`` tokens are
+    tied into the downstream cotangent (``core/chaos.py::delay_tie``) so
+    XLA cannot sink a collective's issue point to the end of the step."""
+    from repro.core.chaos import delay_tie
+    if "patch_embeds" in shards:
+        raise NotImplementedError(
+            "the LM shard tape does not take VLM patch embeddings; run the "
+            "worker mesh without --interleave for patch-embed batches")
+    buckets = {b.name: b for b in bucket_spec(cfg)}
+    tokens, labels = shards["tokens"], shards["labels"]
+    T = tokens.shape[-1]
+    positions = jnp.arange(T)[None, :]
+    uk = cfg.use_kernel
+    ckeys = chunk_keys(cfg)
+    f32 = lambda t: jax.tree.map(lambda a: a.astype(jnp.float32), t)
+
+    # forward, saving each chunk's stacked (s, b, T, d) input activations
+    xs = jax.lax.map(lambda t: embed_tokens(params, t, cfg), tokens)
+    chunk_in, auxes = [], []
+    for key in ckeys:
+        chunk_in.append(xs)
+
+        def run_chunk(x, st=params[key]):
+            return _chunk_forward(st, x, jnp.zeros((), jnp.float32), cfg,
+                                  positions, uk)
+
+        xs, aux_m = jax.lax.map(run_chunk, xs)
+        auxes.append(aux_m)
+    aux = sum(auxes)  # (s,)
+
+    # head: rms_norm + fused CE — per-shard loss, head grads, and dy in
+    # ONE vjp (the head params are cheap; no re-linearisation here)
+    out_key = "out_embed" if "out_embed" in params else "embed"
+    head_p = {"final_norm": params["final_norm"], "out": params[out_key]}
+
+    def head_loss_dy(args):
+        x, lab = args
+
+        def head_fn(hp, x_):
+            h = L.rms_norm(x_, hp["final_norm"])
+            return L.fused_ce(h, hp["out"], lab, cfg.vocab_size)
+
+        ce, vjp = jax.vjp(head_fn, head_p, x)
+        dhp, dx = vjp(jnp.ones((), ce.dtype))
+        return ce, f32(dhp), dx
+
+    ces, dhead, dy = jax.lax.map(head_loss_dy, (xs, labels))
+    losses = ces + 0.01 * aux
+    metrics = {"ce": ces, "aux": aux}
+
+    grads = {}
+    if out_key == "out_embed":
+        grads["out_embed"] = dhead["out"]
+        dy = delay_tie(dy, on_bucket(buckets["out_embed"],
+                                     {"out_embed": grads["out_embed"]}))
+    grads["final_norm"] = dhead["final_norm"]
+    dy = delay_tie(dy, on_bucket(buckets["final_norm"],
+                                 {"final_norm": grads["final_norm"]}))
+
+    for key, x_in in zip(reversed(ckeys), reversed(chunk_in)):
+        def bwd_chunk(args, st=params[key]):
+            x, g = args
+
+            def run(st_, x_):
+                return _chunk_forward(st_, x_, jnp.zeros((), jnp.float32),
+                                      cfg, positions, uk)
+
+            _, vjp = jax.vjp(run, st, x)
+            # cotangents: dy chains through the chunk's hidden-state output;
+            # the aux output enters the loss directly at weight 0.01
+            dst, dx = vjp((g, jnp.asarray(0.01, jnp.float32)))
+            return f32(dst), dx
+
+        dp, dy = jax.lax.map(bwd_chunk, (x_in, dy))
+        grads[key] = dp
+        dy = delay_tie(dy, on_bucket(buckets[key], {key: dp}))
+
+    if cfg.family == "vlm":
+        # patch_proj is unused without patch embeddings: zero grads, same
+        # as value_and_grad over the whole graph
+        s = tokens.shape[0]
+        pp = jnp.zeros((s,) + params["patch_proj"].shape, jnp.float32)
+        grads["patch_proj"] = pp
+        dy = delay_tie(dy, on_bucket(buckets["patch_proj"],
+                                     {"patch_proj": pp}))
+
+    def bwd_embed(args):
+        t, g = args
+
+        def emb(ep):
+            return embed_tokens({"embed": ep}, t, cfg)
+
+        _, vjp = jax.vjp(emb, params["embed"])
+        (de,) = vjp(g)
+        return de.astype(jnp.float32)
+
+    d_embed = jax.lax.map(bwd_embed, (tokens, dy))
+    if out_key == "embed":
+        d_embed = d_embed + dhead["out"]  # tied CE head contribution
+    grads["embed"] = d_embed
+    losses = delay_tie(losses, on_bucket(buckets["embed"],
+                                         {"embed": d_embed}))
+    return losses, metrics, grads
 
 
 # ---------------------------------------------------------------------------
@@ -454,6 +658,7 @@ def decode_step(params, cache, tokens, cache_len, cfg: ArchConfig,
     positions = (cl[:, None] + jnp.arange(T)[None, :] if cl.ndim
                  else (cl + jnp.arange(T))[None, :])
 
+    stack = layer_stack(params, cfg)
     if cfg.scan_layers:
         def body(h, packed):
             lp, c1, c2 = packed
@@ -461,11 +666,11 @@ def decode_step(params, cache, tokens, cache_len, cfg: ArchConfig,
                                   use_kernel)
             return h, new_kv
         x, (nk1, nk2) = jax.lax.scan(body, x,
-                                     (params["layers"], cache[k1], cache[k2]))
+                                     (stack, cache[k1], cache[k2]))
     else:
         nk1s, nk2s = [], []
         for i in range(cfg.n_layers):
-            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            lp = jax.tree.map(lambda a: a[i], stack)
             x, a, new_kv = _block(lp, x, cfg, positions,
                                   (cache[k1][i], cache[k2][i]), cache_len,
                                   use_kernel)

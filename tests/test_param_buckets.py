@@ -84,6 +84,27 @@ def test_bucket_spec_exact_disjoint_cover(family, tie):
         dict(abstract))
 
 
+@pytest.mark.parametrize("chunk,tie", [(0, True), (1, True), (2, False)])
+def test_chunked_lm_bucket_spec_exact_disjoint_cover(chunk, tie):
+    """DESIGN.md §10: ``layer_chunk`` splits the scan stack into per-chunk
+    buckets — the cover must stay exact and keep production order
+    (embed -> layers0..M-1 -> final_norm [-> out_embed])."""
+    cfg = dataclasses.replace(C.get("lm-bench"), layer_chunk=chunk,
+                              tie_embeddings=tie)
+    ops = get_ops(cfg)
+    spec = ops.bucket_spec()
+    abstract = ops.abstract_params()
+    validate_bucket_spec(spec, abstract)
+    covered = [k for b in spec for k in b.keys]
+    assert sorted(covered) == sorted(abstract)
+    names = [b.name for b in spec]
+    from repro.models.lm import chunk_keys
+    want = ["embed"] + list(chunk_keys(cfg)) + ["final_norm"]
+    if not tie:
+        want.append("out_embed")
+    assert names == want
+
+
 def test_validate_bucket_spec_rejects_bad_specs():
     from repro.core.types import ParamBucket
     abstract = {"a": 0, "b": 0}
