@@ -618,12 +618,17 @@ def bench_serve(quick=False):
         raise RuntimeError(f"benchmarks.serve failed rc={out.returncode}")
     doc = json.loads(out.stdout)
     for r in doc["runs"]:
-        row(f"serve/{r['arch']}/{r['mode']}",
+        sampling = r.get("sampling", "greedy")
+        name = (f"serve/{r['arch']}/{r['mode']}"
+                + (f"/{sampling}" if sampling != "greedy" else ""))
+        row(name,
             r["p50_token_latency_s"] * 1e6,
             f"tok_per_s={r['tokens_per_s']:.1f}"
             f"_p99_ms={r['p99_token_latency_s'] * 1e3:.1f}"
             + (f"_speedup_vs_loop=x{r['prefill_speedup_vs_loop']:.2f}"
-               if "prefill_speedup_vs_loop" in r else ""))
+               if "prefill_speedup_vs_loop" in r else "")
+            + (f"_vs_greedy=x{r['sampling_overhead_vs_greedy']:.2f}"
+               if "sampling_overhead_vs_greedy" in r else ""))
     for arch, rl in doc.get("roofline", {}).items():
         row(f"serve/{arch}/roofline", rl["decode_bound_s"] * 1e6,
             f"dom={rl['dominant']}_measured_over_bound="
@@ -677,19 +682,38 @@ def main():
                     default=os.path.normpath(
                         os.path.join(os.path.dirname(__file__), "..")),
                     help="directory for the BENCH_<section>.json artifacts")
+    ap.add_argument("--trace-out", default=None,
+                    help="attach the obs tracer (DESIGN.md §11) and write a "
+                         "Perfetto trace.json of the harness run here: one "
+                         "span per section plus whatever in-process cells "
+                         "emit (subprocess grids trace separately)")
     args = ap.parse_args()
     os.makedirs(args.out, exist_ok=True)
+    tracer = None
+    if args.trace_out:
+        from repro.obs import Tracer
+        from repro.obs import trace as obs_trace
+        tracer = Tracer("bench")
+        obs_trace.set_tracer(tracer)
     print("name,us_per_call,derived")
     for name, fn in SECTIONS.items():
         if args.only and name != args.only:
             continue
         start = len(ROWS)
         try:
-            extra = fn(quick=args.quick)
+            if tracer is not None:
+                with tracer.span(f"section/{name}", quick=bool(args.quick)):
+                    extra = fn(quick=args.quick)
+            else:
+                extra = fn(quick=args.quick)
         except Exception as e:  # keep the harness robust
             extra = {"error": repr(e)[:500]}
             row(f"{name}/ERROR", 0.0, repr(e)[:120])
         _write_section_json(args.out, name, ROWS[start:], extra, args.quick)
+    if tracer is not None:
+        from repro.obs import trace as obs_trace
+        obs_trace.set_tracer(None)
+        tracer.write(args.trace_out)
 
 
 if __name__ == "__main__":

@@ -61,11 +61,15 @@ def _replay(eng, trace):
     return finished, stats
 
 
-def _bench_mode(arch, mode, trace, slots, max_seq, seed):
+def _bench_mode(arch, mode, trace, slots, max_seq, seed,
+                temperature=0.0, top_p=1.0):
     from repro.serve.engine import ServeEngine
     eng = ServeEngine(arch, slots=slots, max_seq=max_seq, seed=seed,
-                      prefill_mode=mode)
-    _log(f"[serve-bench] {arch}/{mode}: warmup replay")
+                      prefill_mode=mode, temperature=temperature,
+                      top_p=top_p)
+    sampling = ("greedy" if temperature <= 0
+                else f"t{temperature:g}_p{top_p:g}")
+    _log(f"[serve-bench] {arch}/{mode}/{sampling}: warmup replay")
     _replay(eng, [r.__class__(**vars(r)) for r in trace])
     eng.clock, eng.step_idx = 0.0, 0
     _log(f"[serve-bench] {arch}/{mode}: measured replay")
@@ -77,7 +81,7 @@ def _bench_mode(arch, mode, trace, slots, max_seq, seed):
     lat = (np.percentile(decode_steps, [50, 99]) if decode_steps
            else np.array([float("nan")] * 2))
     return {
-        "arch": arch, "mode": mode, "slots": slots,
+        "arch": arch, "mode": mode, "sampling": sampling, "slots": slots,
         "requests": len(trace), "tokens": int(toks), "wall_s": wall,
         "tokens_per_s": toks / wall,
         "p50_token_latency_s": float(lat[0]),
@@ -94,7 +98,10 @@ def _roofline_row(eng, arch):
 
     toks = jnp.asarray(eng.last_tok)
     cur = jnp.asarray(eng.kv.cursors)
-    compiled = eng._decode.lower(eng.params, eng.kv.tree, toks, cur).compile()
+    rids = jnp.asarray(eng.slot_rid)
+    poss = jnp.zeros_like(rids)
+    compiled = eng._decode.lower(eng.params, eng.kv.tree, toks, cur,
+                                 rids, poss).compile()
     n_active_params = eng.cfg.active_param_count()
     rl = roofline.analyze(compiled, n_devices=1,
                           model_flops_total=2.0 * n_active_params
@@ -150,6 +157,17 @@ def main():
         speedup = b["tokens_per_s"] / l["tokens_per_s"]
         b["prefill_speedup_vs_loop"] = speedup
         _log(f"[serve-bench] {arch}: batched prefill speedup x{speedup:.2f}")
+        # sampling-mode column: the same trace through seeded top-p
+        # sampling fused into the decode dispatch (cost of sampling =
+        # this row vs the greedy batched row)
+        rs, _ = _bench_mode(arch, "batched", trace, slots, max_seq,
+                            args.seed, temperature=0.8, top_p=0.9)
+        rs["sampling_overhead_vs_greedy"] = (
+            b["tokens_per_s"] / rs["tokens_per_s"])
+        runs.append(rs)
+        _log(f"[serve-bench] {arch}: sampled decode "
+             f"{rs['tokens_per_s']:.1f} tok/s "
+             f"(x{rs['sampling_overhead_vs_greedy']:.2f} vs greedy)")
     print(json.dumps({"runs": runs, "roofline": roofline_info}, indent=1))
 
 

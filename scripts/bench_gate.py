@@ -1,0 +1,74 @@
+#!/usr/bin/env python
+"""Perf gate over BENCH_train.json (DESIGN.md §11): compare a candidate
+train-bench artifact against the committed baseline cell-by-cell, normalised
+for machine speed.
+
+Absolute steps/sec are not comparable across hosts (the committed baseline
+ran elsewhere), so the gate works on RATIOS: for every cell present in both
+artifacts it computes ``candidate_steps_per_s / baseline_steps_per_s``, takes
+the MEDIAN ratio as the machine-speed normaliser, and flags any cell whose
+ratio falls below ``median * (1 - tolerance)`` — i.e. a cell that regressed
+relative to its peers, which a uniformly slower/faster machine cannot cause.
+
+    python scripts/bench_gate.py --baseline BENCH_train.json \
+        --candidate /tmp/bench/BENCH_train.json --tolerance 0.5
+
+Exit 1 lists the offending cells.  Cells only in one artifact (quick runs
+measure a subset) are ignored.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+
+
+def _cells(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    out = {}
+    for r in doc.get("runs", []):
+        out[(r["net"], bool(r["use_kernel"]), r["superstep"])] = \
+            float(r["steps_per_s"])
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_train.json")
+    ap.add_argument("--candidate", required=True,
+                    help="freshly measured BENCH_train.json")
+    ap.add_argument("--tolerance", type=float, default=0.5,
+                    help="allowed per-cell shortfall below the median "
+                         "ratio (0.5 = a cell may be up to 50%% slower "
+                         "than the machine-speed-normalised expectation)")
+    args = ap.parse_args()
+
+    base, cand = _cells(args.baseline), _cells(args.candidate)
+    shared = sorted(set(base) & set(cand))
+    if len(shared) < 2:
+        print(f"[bench-gate] only {len(shared)} shared cell(s) — need >=2 "
+              f"for a median normaliser; skipping gate")
+        return 0
+    ratios = {k: cand[k] / base[k] for k in shared}
+    med = statistics.median(ratios.values())
+    floor = med * (1.0 - args.tolerance)
+    bad = [(k, r) for k, r in ratios.items() if r < floor]
+    print(f"[bench-gate] {len(shared)} shared cells, median ratio "
+          f"{med:.3f}, floor {floor:.3f} (tolerance {args.tolerance})")
+    for (net, kern, k), r in sorted(ratios.items()):
+        mark = "  REGRESSED" if r < floor else ""
+        print(f"  {net}/{'kernel' if kern else 'xla'}/K{k}: "
+              f"{r:.3f}{mark}")
+    if bad:
+        print(f"[bench-gate] FAIL: {len(bad)} cell(s) below the "
+              f"normalised floor", file=sys.stderr)
+        return 1
+    print("[bench-gate] OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -29,6 +29,7 @@ Cache format (one JSON object)::
 """
 from __future__ import annotations
 
+import functools
 import json
 import os
 import time
@@ -38,6 +39,18 @@ import jax.numpy as jnp
 
 from repro.kernels import conv2d as K
 from repro.kernels import fc as FCK
+from repro.obs.trace import span as _obs_span
+
+
+def _traced(fn):
+    """Wrap a tune entry point in an ``autotune`` obs span (DESIGN.md §11)
+    so kernel-tuning time lands on the trace timeline; no-op without an
+    installed tracer."""
+    @functools.wraps(fn)
+    def wrapped(*args, **kwargs):
+        with _obs_span("autotune", target=fn.__name__):
+            return fn(*args, **kwargs)
+    return wrapped
 
 _MEM: dict[str, dict] = {}
 # one-shot disk snapshot so cache misses on the eager hot path don't
@@ -438,6 +451,7 @@ def _time_us(fn, *args, iters: int = 3, warmup: int = 1) -> float:
     return best * 1e6
 
 
+@_traced
 def tune_conv_fwd(x, w, bias=None, *, activation: str | None = None,
                   interpret: bool = True, iters: int = 3,
                   max_candidates: int | None = None):
@@ -465,6 +479,7 @@ def tune_conv_fwd(x, w, bias=None, *, activation: str | None = None,
                   "candidates": measured}
 
 
+@_traced
 def tune_conv_bwd(x, dy, w, y=None, *, interpret: bool = True,
                   iters: int = 3, max_candidates: int | None = None):
     """Measure candidates for the fused backward kernel (dtanh-fused when
@@ -490,6 +505,7 @@ def tune_conv_bwd(x, dy, w, y=None, *, interpret: bool = True,
                   "candidates": measured}
 
 
+@_traced
 def tune_fc_fwd(x, w, bias=None, *, activation: str | None = None,
                 interpret: bool = True, iters: int = 3,
                 max_candidates: int | None = None):
@@ -517,6 +533,7 @@ def tune_fc_fwd(x, w, bias=None, *, activation: str | None = None,
                   "candidates": measured}
 
 
+@_traced
 def tune_fc_bwd(x, dy, w, y=None, *, interpret: bool = True, iters: int = 3,
                 max_candidates: int | None = None):
     """Measure candidates for the fused FC backward (dtanh-fused when ``y``
@@ -542,6 +559,7 @@ def tune_fc_bwd(x, dy, w, y=None, *, interpret: bool = True, iters: int = 3,
                   "candidates": measured}
 
 
+@_traced
 def tune_flash_attention(q, k, v, *, causal: bool = True,
                          interpret: bool = True, iters: int = 3,
                          max_candidates: int | None = None):

@@ -21,13 +21,15 @@ import time
 import numpy as np
 
 import repro.configs as C
+from repro.obs import MetricsBus, Tracer
 from repro.serve.engine import (Request, RequestFeed, ServeEngine,
                                 poisson_trace)
 
 
 def serve(arch: str, batch: int = 4, prompt_len: int = 32, gen: int = 32,
           max_seq: int = 128, smoke: bool = True, seed: int = 0,
-          prefill_mode: str = "batched", use_kernel: bool = False):
+          prefill_mode: str = "batched", use_kernel: bool = False,
+          temperature: float = 0.0, top_p: float = 1.0):
     """Static-batch serving (compat shape): ``batch`` equal-length prompts
     all arrive at t=0, each generates ``gen`` tokens.  Returns the
     (batch, gen) generated tokens.  Dispatch contract: 1 batched prefill +
@@ -35,7 +37,8 @@ def serve(arch: str, batch: int = 4, prompt_len: int = 32, gen: int = 32,
     cfg = C.smoke(arch) if smoke else C.get(arch)
     eng = ServeEngine(arch, slots=batch, max_seq=max_seq, smoke=smoke,
                       seed=seed, prefill_mode=prefill_mode,
-                      use_kernel=use_kernel)
+                      use_kernel=use_kernel, temperature=temperature,
+                      top_p=top_p)
     rng = np.random.default_rng(seed)
     trace = [Request(rid=i,
                      tokens=rng.integers(0, cfg.vocab_size,
@@ -59,7 +62,8 @@ def serve_trace(arch: str, *, slots: int = 4, requests: int = 16,
                 rate: float = 0.5, prompt_lens=(8, 32), gen: int = 16,
                 max_seq: int = 128, smoke: bool = True, seed: int = 0,
                 prefill_mode: str = "batched", use_kernel: bool = False,
-                feed_depth: int = 64):
+                feed_depth: int = 64, temperature: float = 0.0,
+                top_p: float = 1.0, tracer=None, bus=None):
     """Continuous batching under a seeded Poisson trace.  The RequestFeed
     thread replays the trace into a bounded queue (the PrefetchFeed
     feed/compute split) while the engine loop admits, decodes, and evicts.
@@ -67,7 +71,8 @@ def serve_trace(arch: str, *, slots: int = 4, requests: int = 16,
     cfg = C.smoke(arch) if smoke else C.get(arch)
     eng = ServeEngine(arch, slots=slots, max_seq=max_seq, smoke=smoke,
                       seed=seed, prefill_mode=prefill_mode,
-                      use_kernel=use_kernel)
+                      use_kernel=use_kernel, temperature=temperature,
+                      top_p=top_p, tracer=tracer, bus=bus)
     trace = poisson_trace(seed, requests, rate, cfg.vocab_size,
                           prompt_lens=prompt_lens, max_new=gen)
     feed = RequestFeed(trace, depth=feed_depth)
@@ -105,8 +110,18 @@ def main():
     ap.add_argument("--use-kernel", action="store_true",
                     help="route GQA prefill through the Pallas flash kernel")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="> 0 enables seeded sampling fused into the decode "
+                         "dispatch (0 = greedy, the default)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (only with --temperature)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Perfetto trace.json of the engine "
+                         "lifecycle here (DESIGN.md §11)")
     ap.add_argument("--full-config", action="store_true")
     args = ap.parse_args()
+    tracer = Tracer("serve") if args.trace_out else None
+    bus = MetricsBus() if args.trace_out else None
     if args.slots:
         finished, counters, times = serve_trace(
             args.arch, slots=args.slots, requests=args.requests,
@@ -114,7 +129,9 @@ def main():
             prompt_lens=(max(4, args.prompt_len // 2), args.prompt_len),
             max_seq=args.prompt_len + args.gen + 8,
             smoke=not args.full_config, seed=args.seed,
-            prefill_mode=args.prefill_mode, use_kernel=args.use_kernel)
+            prefill_mode=args.prefill_mode, use_kernel=args.use_kernel,
+            temperature=args.temperature, top_p=args.top_p,
+            tracer=tracer, bus=bus)
         toks = sum(f.prompt_len + len(f.tokens) for f in finished)
         dt = sum(times)
         print(f"[serve-trace {args.arch}] {len(finished)} requests, "
@@ -125,7 +142,15 @@ def main():
         serve(args.arch, args.batch, args.prompt_len, args.gen,
               max_seq=args.prompt_len + args.gen + 8,
               smoke=not args.full_config, seed=args.seed,
-              prefill_mode=args.prefill_mode, use_kernel=args.use_kernel)
+              prefill_mode=args.prefill_mode, use_kernel=args.use_kernel,
+              temperature=args.temperature, top_p=args.top_p)
+    if tracer is not None:
+        tracer.write(args.trace_out)
+        s = bus.summary()
+        if s["histograms"]:
+            print("[obs] serve histograms:",
+                  {k: round(v["mean"], 4)
+                   for k, v in s["histograms"].items()})
 
 
 if __name__ == "__main__":

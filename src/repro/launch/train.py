@@ -60,6 +60,8 @@ from repro.data.pipeline import ImagePipeline, TokenPipeline
 from repro.launch.elastic import ResizeController
 from repro.launch.faults import FaultPlan
 from repro.launch.mesh import make_host_mesh
+from repro.obs import JsonlSink, MetricsBus, Tracer
+from repro.obs import trace as obs_trace
 from repro.train.step import (init_train_state, init_worker_state,
                               make_optimizer, make_superstep,
                               make_worker_superstep)
@@ -84,10 +86,18 @@ class StragglerWatchdog:
     be flagged as a phantom straggler itself.  The driver builds a FRESH
     watchdog after an elastic resize for the same reason — a new mesh
     recompiles and retimes.
+
+    Every observation (including warmup — a 5-second compile is exactly
+    what you want visible on the timeline) is exported to the obs layer
+    when one is attached: a ``watchdog/superstep_s`` gauge + histogram on
+    the metrics bus, a Perfetto counter track on the tracer — so a stall
+    shows up in the trace BEFORE any eviction fires, not only as its
+    after-the-fact ResizeOutcome row.
     """
 
     def __init__(self, window: int | None = None, z: float = 3.0,
-                 superstep: int = 1, max_flags: int = 64, warmup: int = 2):
+                 superstep: int = 1, max_flags: int = 64, warmup: int = 2,
+                 bus: MetricsBus | None = None, tracer: Tracer | None = None):
         if window is None:
             window = max(8, 200 // max(superstep, 1))
         self.times: deque = deque(maxlen=window)
@@ -95,11 +105,19 @@ class StragglerWatchdog:
         self.z = z
         self.flagged: deque = deque(maxlen=max_flags)
         self.warmup = warmup
+        self.bus = bus
+        self.tracer = tracer
 
     def observe(self, step: int, dt: float) -> bool:
         """Record one superstep wall time; True when it was flagged as a
         straggler (the driver's --evict-stragglers feeds this verdict to
         the elastic ResizeController as a membership event)."""
+        if self.bus is not None:
+            self.bus.gauge("watchdog/superstep_s", dt)
+            self.bus.observe("watchdog/superstep_s", dt)
+            self.bus.series("watchdog/superstep_s", step, dt)
+        if self.tracer is not None:
+            self.tracer.counter("watchdog/superstep_s", dt)
         if self.warmup > 0:
             self.warmup -= 1
             return False
@@ -112,6 +130,12 @@ class StragglerWatchdog:
             if dt > mu + self.z * sd:
                 straggled = True
                 self.flagged.append((step, dt, mu))
+                if self.bus is not None:
+                    self.bus.event("straggler", step=step, dt_s=dt,
+                                   mean_s=mu)
+                if self.tracer is not None:
+                    self.tracer.instant("straggler", step=step, dt_s=dt,
+                                        mean_s=mu)
                 print(f"[watchdog] superstep ending at {step} straggled: "
                       f"{dt * 1e3:.1f}ms vs mean {mu * 1e3:.1f}ms",
                       flush=True)
@@ -235,9 +259,43 @@ def train(arch: str, steps: int, sync_mode: str = "bsp", batch: int = 8,
           evict_stragglers: bool = False, readmit_after: int | None = None,
           collective_delay: float = 0.0, interleave: bool = False,
           micro_batches: int | None = None,
-          layer_chunk: int | None = None):
+          layer_chunk: int | None = None, trace_out: str | None = None,
+          metrics_interval: int = 0, metrics_bus: MetricsBus | None = None):
     if superstep < 1:
         raise ValueError(f"superstep must be >= 1, got {superstep}")
+    # -- observability (DESIGN.md §11) ------------------------------------
+    # The bus is ALWAYS present (it replaced the ad-hoc loss_map / metrics
+    # dict — per-step cost is one dict store); the tracer only when asked.
+    # set_tracer BEFORE building any step function: the worker-mesh bucket
+    # paths consult the global at build time, so with no tracer the
+    # compiled graphs are byte-identical to a no-obs build.
+    bus = metrics_bus if metrics_bus is not None else MetricsBus()
+    if bus.sink is None and metrics_interval > 0 and metrics_out:
+        bus.sink = JsonlSink(metrics_out + ".jsonl")
+    tracer = Tracer("train") if trace_out else None
+    prev_tracer = obs_trace.set_tracer(tracer) if tracer else None
+    try:
+        return _train(arch, steps, sync_mode, batch, seq, ckpt_dir,
+                      ckpt_every, die_at_step, base_lr, compress, log_every,
+                      smoke, superstep, use_kernel, workers, logical_shards,
+                      staleness, layerwise, optim, ring_dtype, inject,
+                      inject_seed, metrics_out, evict_stragglers,
+                      readmit_after, collective_delay, interleave,
+                      micro_batches, layer_chunk, metrics_interval, bus,
+                      tracer)
+    finally:
+        if tracer is not None:
+            obs_trace.set_tracer(prev_tracer)
+            tracer.write(trace_out)
+        bus.close()
+
+
+def _train(arch, steps, sync_mode, batch, seq, ckpt_dir, ckpt_every,
+           die_at_step, base_lr, compress, log_every, smoke, superstep,
+           use_kernel, workers, logical_shards, staleness, layerwise, optim,
+           ring_dtype, inject, inject_seed, metrics_out, evict_stragglers,
+           readmit_after, collective_delay, interleave, micro_batches,
+           layer_chunk, metrics_interval, bus, tracer):
     plan = FaultPlan.from_spec(inject, seed=inject_seed)
     cfg = C.smoke(arch) if smoke else C.get(arch)
     if use_kernel:
@@ -305,13 +363,15 @@ def train(arch: str, steps: int, sync_mode: str = "bsp", batch: int = 8,
             state, start = mgr.restore(state)
             print(f"[train] resumed from step {start}", flush=True)
 
-    watchdog = StragglerWatchdog(superstep=superstep)
-    # losses keyed by step: an elastic ckpt-restore rung may REPLAY a few
-    # steps, and replayed entries overwrite their originals (bit-exactly
-    # for worker-count-invariant strategies) instead of duplicating
-    loss_map: dict[int, float] = {}
+    watchdog = StragglerWatchdog(superstep=superstep, bus=bus, tracer=tracer)
+    # losses live on the bus as a step-keyed series: an elastic
+    # ckpt-restore rung may REPLAY a few steps, and replayed entries
+    # overwrite their originals (bit-exactly for worker-count-invariant
+    # strategies) instead of duplicating
     saved_at = None
     next_start = start
+    faults_seen = 0
+    work_s, work_steps = 0.0, 0
     while next_start < steps:
         feed = PrefetchFeed(pipe,
                             superstep_schedule(next_start, steps, superstep),
@@ -319,21 +379,47 @@ def train(arch: str, steps: int, sync_mode: str = "bsp", batch: int = 8,
         resize_request = None
         for s0, k, dev_batch in feed:
             t0 = time.time()
-            state, metrics = super_fn(state, dev_batch)
-            # ONE host sync per K steps: the (K,) loss vector
-            loss_vec = np.asarray(metrics["loss"])
+            if tracer is not None:
+                with tracer.span("superstep", step_start=s0, k=k):
+                    state, metrics = super_fn(state, dev_batch)
+                    # ONE host sync per K steps: the (K,) loss vector —
+                    # inside the span so it covers device time, not just
+                    # the async dispatch
+                    loss_vec = np.asarray(metrics["loss"])
+            else:
+                state, metrics = super_fn(state, dev_batch)
+                loss_vec = np.asarray(metrics["loss"])
             end = s0 + k
             for t in range(s0, end):
-                loss_map[t] = float(loss_vec[t - s0])
+                bus.series("train/loss", t, float(loss_vec[t - s0]))
             if plan is not None:
                 plan.stall(end)  # inside the watchdog's timed window
-            straggled = watchdog.observe(end, time.time() - t0)
+            dt = time.time() - t0
+            straggled = watchdog.observe(end, dt)
+            work_s += dt
+            work_steps += k
+            bus.gauge("train/steps_per_s", work_steps / max(work_s, 1e-9))
+            bus.gauge("train/loss", float(loss_vec[-1]))
+            if plan is not None and len(plan.log) > faults_seen:
+                for f in plan.log[faults_seen:]:
+                    bus.event("fault", **f)
+                    if tracer is not None:
+                        tracer.instant("fault", **f)
+                faults_seen = len(plan.log)
+            if metrics_interval > 0 and (
+                    end // metrics_interval > s0 // metrics_interval):
+                if bus.sink is not None:
+                    bus.flush(end)
+                else:
+                    print(f"[obs] step {end} "
+                          + json.dumps(bus.summary()["gauges"]), flush=True)
             for t in range(s0, end):
                 if t % log_every == 0:
                     print(f"[train {arch} sync={sync_mode}] step {t} "
                           f"loss={loss_vec[t - s0]:.4f}", flush=True)
             if mgr and end // ckpt_every > s0 // ckpt_every:
-                mgr.save(end, state, blocking=False)
+                with obs_trace.span("checkpoint", step=end):
+                    mgr.save(end, state, blocking=False)
                 saved_at = end
             if die_at_step is not None and end >= die_at_step:
                 if mgr:
@@ -364,36 +450,38 @@ def train(arch: str, steps: int, sync_mode: str = "bsp", batch: int = 8,
         if mgr:
             mgr.wait()  # never race an async save with the restore rung
         target, reason = resize_request
-        state, new_super_fn, outcome = controller.resize(
-            state, target, next_start, reason=reason)
+        with obs_trace.span("resize", target=target, reason=reason,
+                            at_step=next_start):
+            state, new_super_fn, outcome = controller.resize(
+                state, target, next_start, reason=reason)
+        bus.event("resize", **outcome.as_dict())
+        bus.gauge("train/workers", controller.worker.workers)
         if new_super_fn is not None:
             super_fn = new_super_fn
             put = (lambda p, s, k, m=controller.mesh, w=controller.worker:
                    put_worker_sharded(p, s, k, m, w))
             # new mesh => recompile + new timing regime: stale window stats
             # would flag the first post-resize superstep as a straggler
-            watchdog = StragglerWatchdog(superstep=superstep)
+            watchdog = StragglerWatchdog(superstep=superstep, bus=bus,
+                                         tracer=tracer)
         if outcome.restart_step is not None:
             next_start = outcome.restart_step  # replay from the checkpoint
 
-    losses = [loss_map[s] for s in sorted(loss_map)]
+    losses = bus.series_sorted("train/loss")
     if mgr:
         if saved_at == steps:
             mgr.wait()
         else:
-            mgr.save(steps, state, blocking=True)
+            with obs_trace.span("checkpoint", step=steps):
+                mgr.save(steps, state, blocking=True)
+    if plan is not None and len(plan.log) > faults_seen:
+        for f in plan.log[faults_seen:]:
+            bus.event("fault", **f)
     if metrics_out:
-        with open(metrics_out, "w") as f:
-            json.dump({
-                "arch": arch, "sync": sync_mode, "steps": steps,
-                "losses": losses,
-                "resizes": ([o.as_dict() for o in controller.outcomes]
-                            if controller else []),
-                "faults": plan.log if plan else [],
-                "workers_final": (controller.worker.workers
-                                  if controller else None),
-            }, f, indent=1)
-        print(f"[train] wrote metrics to {metrics_out}", flush=True)
+        bus.write_metrics_out(metrics_out, arch=arch, sync=sync_mode,
+                              steps=steps,
+                              workers_final=(controller.worker.workers
+                                             if controller else None))
     return state, losses
 
 
@@ -454,7 +542,17 @@ def main():
     ap.add_argument("--metrics-out", default=None,
                     help="write a JSON artifact with the per-step loss "
                          "sequence, resize outcomes, and fired faults "
-                         "(CI / test assertions)")
+                         "(CI / test assertions; composed by the obs "
+                         "metrics bus, DESIGN.md §11)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-trace/Perfetto trace.json (+ "
+                         ".jsonl) with superstep/checkpoint/resize spans "
+                         "and, on the layerwise worker mesh, per-bucket "
+                         "exchange issue/gate spans (DESIGN.md §11)")
+    ap.add_argument("--metrics-interval", type=int, default=0,
+                    help="emit a metrics-bus snapshot every N steps — to "
+                         "<metrics-out>.jsonl when --metrics-out is set, "
+                         "else to stdout; 0 disables")
     ap.add_argument("--evict-stragglers", action="store_true",
                     help="feed straggler-watchdog verdicts to the elastic "
                          "resize controller (shed one worker per verdict)")
@@ -498,7 +596,9 @@ def main():
                       collective_delay=args.collective_delay,
                       interleave=args.interleave,
                       micro_batches=args.micro_batches,
-                      layer_chunk=args.layer_chunk)
+                      layer_chunk=args.layer_chunk,
+                      trace_out=args.trace_out,
+                      metrics_interval=args.metrics_interval)
     print(f"[train] done: first-10 mean {np.mean(losses[:10]):.4f} -> "
           f"last-10 mean {np.mean(losses[-10:]):.4f}")
 

@@ -1,0 +1,9 @@
+"""Observability subsystem (DESIGN.md §11): span tracing with Perfetto
+export (`obs.trace`) and the counters/gauges/histograms metrics bus
+(`obs.metrics`).  Zero-cost when unused: no tracer installed ⇒ nothing is
+inserted into any compiled graph or hot loop."""
+from repro.obs.metrics import JsonlSink, MetricsBus
+from repro.obs.trace import Tracer, get_tracer, set_tracer, span
+
+__all__ = ["JsonlSink", "MetricsBus", "Tracer", "get_tracer", "set_tracer",
+           "span"]

@@ -1,0 +1,288 @@
+"""Span tracer (DESIGN.md §11): host-side nestable spans + in-dispatch
+per-bucket exchange stamps, exported as Chrome-trace/Perfetto ``trace.json``
+and a flat JSONL.
+
+Two event sources share one clock (`core/chaos.py`'s deadline epoch, so
+trace timestamps and injected-latency deadlines line up exactly):
+
+- **host spans** — `Tracer.span(...)` context manager around driver-side
+  phases (``superstep``, ``prefill``, ``decode``, ``checkpoint``,
+  ``resize``, ``autotune``).  Cost: one ``time.monotonic()`` pair + a dict
+  append; nesting is Perfetto's native stacking of overlapping complete
+  events on one track.
+
+- **device stamps** — ``bucket_issue``/``bucket_gate`` reuse the PR-7
+  ``pure_callback`` deadline machinery (``core/chaos.py``): the issue
+  callback fires the moment a bucket's gradient exists mid-backward and
+  returns the f32 deadline token (``now + delay_ms``, ms since the chaos
+  epoch — the SAME token ``delay_gate`` consumes), recording the issue
+  time; the gate callback sleeps the deadline remainder (0 when no latency
+  is injected) and records ``[gate_start, gate_end]`` plus the residual
+  actually slept.  With ``delay_ms > 0`` the pair IS the injection — the
+  traced path never double-charges.  ``finalize()`` pairs the i-th issue
+  with the i-th gate per (bucket, worker) — one issue and one gate per
+  step, steps are sequential inside the scan — yielding per-bucket
+  ``exchange/<bucket>`` spans (issue → gate end, the in-flight window) and
+  ``exchange_wait/<bucket>`` spans (the gate's critical-path sleep, whose
+  per-step sum is the measured exchange cost BENCH_overlap.json calls
+  ``exchange_us``).
+
+Track layout (Perfetto): pid per subsystem (``train`` / ``serve`` /
+``bench``), tid 0 = the host thread (``driver`` / ``engine``), tid 1+ one
+per worker (``worker0..N``) or slot (``slot0..S``).  Span args carry
+bytes, bucket name, τ, and injected delay.
+
+When no tracer is installed (``get_tracer() is None``) nothing is inserted
+anywhere — the compiled graph, and therefore every bit-exactness pin, is
+byte-identical to a no-obs build.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from contextlib import contextmanager
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.chaos import _EPOCH, _first_scalar
+
+
+def _now_us() -> float:
+    """Microseconds since the chaos deadline epoch (shared clock)."""
+    return (time.monotonic() - _EPOCH) * 1e6
+
+
+class Tracer:
+    """Collects events in memory; ``write()`` exports trace.json + .jsonl.
+
+    Thread-safe: host spans come from the driver thread, device stamps from
+    XLA host-callback threads (one per forced-host device), serve spans
+    from the engine loop.
+    """
+
+    def __init__(self, process: str = "train"):
+        self.default_process = process
+        self._lock = threading.Lock()
+        self._events: list = []          # chrome "X"/"i"/"C" dicts
+        self._device: list = []          # raw issue/gate stamp records
+        self._tag_args: dict = {}        # bucket tag -> static args
+        self._pids: dict = {}            # process name -> pid
+        self._tids: dict = {}            # (pid, thread name) -> tid
+
+    # -- track bookkeeping --------------------------------------------------
+    def _track(self, process: Optional[str], thread: str):
+        process = process or self.default_process
+        with self._lock:
+            pid = self._pids.setdefault(process, len(self._pids) + 1)
+            key = (pid, thread)
+            if key not in self._tids:
+                used = [t for (p, _), t in self._tids.items() if p == pid]
+                self._tids[key] = (max(used) + 1) if used else 0
+            return pid, self._tids[key]
+
+    # -- host spans ---------------------------------------------------------
+    @contextmanager
+    def span(self, name: str, *, process: Optional[str] = None,
+             thread: str = "driver", cat: str = "host", **args):
+        t0 = _now_us()
+        try:
+            yield self
+        finally:
+            t1 = _now_us()
+            pid, tid = self._track(process, thread)
+            ev = {"name": name, "ph": "X", "ts": t0, "dur": t1 - t0,
+                  "pid": pid, "tid": tid, "cat": cat}
+            if args:
+                ev["args"] = args
+            with self._lock:
+                self._events.append(ev)
+
+    def complete(self, name: str, t0_us: float, t1_us: float, *,
+                 process: Optional[str] = None, thread: str = "driver",
+                 cat: str = "host", **args):
+        """Record a span from explicit ``_now_us()``-clock endpoints (for
+        lifecycles that open in one call and close in another, e.g. a serve
+        request's admit→evict window)."""
+        pid, tid = self._track(process, thread)
+        ev = {"name": name, "ph": "X", "ts": t0_us, "dur": t1_us - t0_us,
+              "pid": pid, "tid": tid, "cat": cat}
+        if args:
+            ev["args"] = args
+        with self._lock:
+            self._events.append(ev)
+
+    def instant(self, name: str, *, process: Optional[str] = None,
+                thread: str = "driver", cat: str = "host", **args):
+        pid, tid = self._track(process, thread)
+        ev = {"name": name, "ph": "i", "s": "t", "ts": _now_us(),
+              "pid": pid, "tid": tid, "cat": cat}
+        if args:
+            ev["args"] = args
+        with self._lock:
+            self._events.append(ev)
+
+    def counter(self, name: str, value: float, *,
+                process: Optional[str] = None, thread: str = "driver"):
+        """Chrome counter event — renders as a value track in Perfetto
+        (e.g. per-superstep wall time, so a straggler is visible as a spike
+        before any eviction fires)."""
+        pid, tid = self._track(process, thread)
+        with self._lock:
+            self._events.append({"name": name, "ph": "C", "ts": _now_us(),
+                                 "pid": pid, "tid": tid,
+                                 "args": {"value": float(value)}})
+
+    def now_us(self) -> float:
+        return _now_us()
+
+    # -- in-dispatch device stamps (pure_callback, chaos deadline clock) ----
+    def _issue_cb(self, tag, widx, _anchor, delay_ms):
+        t = _now_us()
+        with self._lock:
+            self._device.append({"tag": tag, "phase": "issue",
+                                 "worker": int(widx), "t_us": t,
+                                 "delay_ms": float(delay_ms)})
+        # deadline token in ms since the chaos epoch — delay_gate-compatible
+        return np.float32(t * 1e-3 + float(delay_ms))
+
+    def _gate_cb(self, tag, deadline, widx, _anchor):
+        t0 = _now_us()
+        rem = (float(deadline) - t0 * 1e-3) * 1e-3
+        if rem > 0:
+            time.sleep(rem)
+        t1 = _now_us()
+        with self._lock:
+            self._device.append({"tag": tag, "phase": "gate",
+                                 "worker": int(widx), "t_us": t0,
+                                 "t_end_us": t1,
+                                 "slept_ms": max(rem, 0.0) * 1e3})
+        return np.float32(0.0)
+
+    def bucket_issue(self, anchor_tree, tag: str, delay_ms=0.0, worker=None,
+                     args: Optional[dict] = None):
+        """Issue stamp: fires when ``anchor_tree``'s first leaf is ready
+        (the exchange's issue point, mid-backward).  Returns the f32
+        deadline token, exactly like ``core.chaos.delay_start`` — with
+        ``delay_ms > 0`` the stamped deadline doubles as the injected
+        collective latency.  ``args`` (static per tag: bytes, τ, ...) land
+        on the exported spans."""
+        if args:
+            with self._lock:
+                self._tag_args.setdefault(tag, dict(args))
+        w = jnp.asarray(0 if worker is None else worker, jnp.int32)
+        return jax.pure_callback(
+            partial(self._issue_cb, tag),
+            jax.ShapeDtypeStruct((), np.float32),
+            w, _first_scalar(anchor_tree),
+            jnp.asarray(delay_ms, jnp.float32))
+
+    def bucket_gate(self, tree, token, anchor_tree, tag: str, worker=None):
+        """Gate stamp: once ``anchor_tree`` is ready, sleep ``token``'s
+        deadline remainder (0 when nothing was injected), record the gate
+        window, and pass ``tree`` through value-unchanged (the gate's 0.0
+        is added to the first leaf so XLA cannot eliminate or reorder it —
+        ``core.chaos.delay_gate``'s tie)."""
+        w = jnp.asarray(0 if worker is None else worker, jnp.int32)
+        z = jax.pure_callback(
+            partial(self._gate_cb, tag),
+            jax.ShapeDtypeStruct((), np.float32),
+            token, w, _first_scalar(anchor_tree))
+        leaves, treedef = jax.tree.flatten(tree)
+        leaves = [leaves[0] + z.astype(leaves[0].dtype)] + leaves[1:]
+        return jax.tree.unflatten(treedef, leaves)
+
+    # -- assembly / export --------------------------------------------------
+    def finalize(self) -> list:
+        """Pair issue/gate stamps into ``exchange``/``exchange_wait`` spans
+        on per-worker tracks; returns (and caches into the event list via
+        ``to_chrome``) the chrome dicts."""
+        by_key: dict = {}
+        with self._lock:
+            device = list(self._device)
+        for rec in device:
+            by_key.setdefault((rec["tag"], rec["worker"]),
+                              {"issue": [], "gate": []})[rec["phase"]] \
+                .append(rec)
+        out = []
+        for (tag, worker), recs in sorted(by_key.items()):
+            issues = sorted(recs["issue"], key=lambda r: r["t_us"])
+            gates = sorted(recs["gate"], key=lambda r: r["t_us"])
+            pid, tid = self._track(None, f"worker{worker}")
+            static = self._tag_args.get(tag, {})
+            for i, g in zip(issues, gates):
+                args = {"bucket": tag, "worker": worker,
+                        "slept_ms": g["slept_ms"],
+                        "delay_ms": i["delay_ms"], **static}
+                out.append({"name": f"exchange/{tag}", "ph": "X",
+                            "ts": i["t_us"],
+                            "dur": g["t_end_us"] - i["t_us"],
+                            "pid": pid, "tid": tid, "cat": "exchange",
+                            "args": args})
+                out.append({"name": f"exchange_wait/{tag}", "ph": "X",
+                            "ts": g["t_us"],
+                            "dur": g["t_end_us"] - g["t_us"],
+                            "pid": pid, "tid": tid, "cat": "exchange",
+                            "args": args})
+        return out
+
+    def to_chrome(self) -> dict:
+        device = self.finalize()     # registers worker tracks before the
+        events = []                  # metadata snapshot below
+        with self._lock:
+            pids = dict(self._pids)
+            tids = dict(self._tids)
+            host = list(self._events)
+        for name, pid in pids.items():
+            events.append({"ph": "M", "name": "process_name", "pid": pid,
+                           "tid": 0, "args": {"name": name}})
+        for (pid, tname), tid in tids.items():
+            events.append({"ph": "M", "name": "thread_name", "pid": pid,
+                           "tid": tid, "args": {"name": tname}})
+        events += host + device
+        return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+    def write(self, path: str):
+        """Write Chrome-trace JSON to ``path`` and a flat JSONL (one event
+        per line, the log-pipeline-friendly form) next to it."""
+        doc = self.to_chrome()
+        with open(path, "w") as f:
+            json.dump(doc, f)
+        jsonl = path + "l" if path.endswith(".json") else path + ".jsonl"
+        with open(jsonl, "w") as f:
+            for ev in doc["traceEvents"]:
+                f.write(json.dumps(ev) + "\n")
+        print(f"[obs] wrote {len(doc['traceEvents'])} trace events to "
+              f"{path} (+ {jsonl})", flush=True)
+
+
+# -- module-global active tracer (build-time switch) ------------------------
+_ACTIVE: Optional[Tracer] = None
+
+
+def set_tracer(tracer: Optional[Tracer]) -> Optional[Tracer]:
+    """Install (or clear, with None) the process-wide tracer.  Step builders
+    consult this AT BUILD TIME: functions compiled while it is None contain
+    no callbacks at all.  Returns the previous tracer."""
+    global _ACTIVE
+    prev, _ACTIVE = _ACTIVE, tracer
+    return prev
+
+
+def get_tracer() -> Optional[Tracer]:
+    return _ACTIVE
+
+
+@contextmanager
+def span(name: str, **kw):
+    """No-op when no tracer is installed; otherwise ``Tracer.span``."""
+    t = _ACTIVE
+    if t is None:
+        yield None
+    else:
+        with t.span(name, **kw):
+            yield t

@@ -22,11 +22,12 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.chaos import (SyncConfig, delay_gate, delay_start,
-                              gathered_shard_mean)
+                              delay_tie, gathered_shard_mean)
 from repro.core.schedule import make_lr_fn
 from repro.core.types import ArchConfig, WorkerConfig
 from repro.models import layers as ML
 from repro.models.api import get_ops
+from repro.obs import trace as obs_trace
 from repro.optim import adamw, sgd
 from repro.train.sync import StepContext, get_strategy
 
@@ -371,12 +372,22 @@ def make_worker_train_step(cfg: ArchConfig, sync: SyncConfig,
             # per-shard gradient bytes (bf16 on the compressed wire)
             itemsize = 2 if sync.compress else 4
             abstract = ops.abstract_params()
-            bucket_ms = {
+            bucket_bytes = {
                 b.name: S * sum(l.size * itemsize for l in
                                 jax.tree.leaves(b.view(abstract)))
-                * delay * 1e-6
                 for b in spec}
+            bucket_ms = {name: nbytes * delay * 1e-6
+                         for name, nbytes in bucket_bytes.items()}
             inject = delay > 0 and N > 1 and strat.bucket_exchange_gathers
+            # per-bucket exchange stamps (obs, DESIGN.md §11): when a tracer
+            # is installed AT BUILD TIME, the issue/gate pair is routed
+            # through it — the tracer's callbacks stamp event times AND
+            # carry the same deadline token, so tracing + injection share
+            # one callback pair (never double-charged).  No tracer ⇒ this
+            # whole branch compiles exactly as before.
+            tracer = obs_trace.get_tracer()
+            stamp = (tracer is not None and N > 1
+                     and strat.bucket_exchange_gathers)
 
             def bucket_step(state, batch):
                 exchange_bucket, finish = strat.bucket_exchange(
@@ -384,14 +395,26 @@ def make_worker_train_step(cfg: ArchConfig, sync: SyncConfig,
                 shards = jax.tree.map(
                     lambda x: x.reshape((s_local, x.shape[0] // s_local)
                                         + x.shape[1:]), batch)
+                widx = jax.lax.axis_index(axis) if stamp else None
                 exchanged = {}
 
                 def on_bucket(bucket, g_b):
                     g_ex = exchange_bucket(bucket, g_b)
                     # deadline stamped when this bucket's gradient exists =
                     # the collective's issue point, mid-backward
-                    tok = (delay_start(g_b, bucket_ms[bucket.name])
-                           if inject else None)
+                    if stamp:
+                        tok = tracer.bucket_issue(
+                            g_b, bucket.name,
+                            delay_ms=bucket_ms[bucket.name] if inject
+                            else 0.0,
+                            worker=widx,
+                            args={"bytes": bucket_bytes[bucket.name],
+                                  "tau": sync.staleness,
+                                  "schedule": "interleave"})
+                    elif inject:
+                        tok = delay_start(g_b, bucket_ms[bucket.name])
+                    else:
+                        tok = None
                     exchanged[bucket.name] = (g_ex, tok)
                     return tok
 
@@ -405,7 +428,10 @@ def make_worker_train_step(cfg: ArchConfig, sync: SyncConfig,
                 new_opt = state["opt"]
                 for bucket in reversed(spec):
                     g_ex, tok = exchanged[bucket.name]
-                    if tok is not None:
+                    if tok is not None and stamp:
+                        g_ex = tracer.bucket_gate(g_ex, tok, anchor,
+                                                  bucket.name, worker=widx)
+                    elif tok is not None:
                         g_ex = delay_gate(g_ex, tok, anchor)
                     new_p_b, new_opt = _apply_bucket(
                         optimizer, bucket, new_params, g_ex, new_opt,
@@ -427,9 +453,36 @@ def make_worker_train_step(cfg: ArchConfig, sync: SyncConfig,
         # dividing logical_shards); with delay injection each bucket's
         # gather charge lands synchronously inside the walk (the baseline
         # benchmarks/overlap.py measures the interleaved tape against)
+        tracer = obs_trace.get_tracer()
+        stamp = (tracer is not None and N > 1
+                 and strat.bucket_exchange_gathers)
+        if stamp:
+            itemsize = 2 if sync.compress else 4
+            abstract = ops.abstract_params()
+            bucket_bytes = {
+                b.name: S * sum(l.size * itemsize for l in
+                                jax.tree.leaves(b.view(abstract)))
+                for b in spec}
+
         def bucket_step(state, batch):
             exchange_bucket, finish = strat.bucket_exchange(
                 ctx, state["sync"], state["step"])
+            if stamp:
+                # wrap each bucket's exchange in an issue/gate stamp pair:
+                # the span covers the gather (and, with --collective-delay,
+                # the blocking charge gathered_shard_mean injects inside it)
+                widx = jax.lax.axis_index(axis)
+                inner_exchange = exchange_bucket
+
+                def exchange_bucket(bucket, g_b):
+                    tok = tracer.bucket_issue(
+                        g_b, bucket.name, worker=widx,
+                        args={"bytes": bucket_bytes[bucket.name],
+                              "tau": sync.staleness,
+                              "schedule": "collect"})
+                    g_ex = inner_exchange(bucket, delay_tie(g_b, tok))
+                    return tracer.bucket_gate(g_ex, tok, g_ex, bucket.name,
+                                              worker=widx)
             losses, metrics, grads = ctx.grad_fn(state["params"], batch)
             new_params, new_opt = _bucket_walk(
                 spec, optimizer, exchange_bucket, state["params"],

@@ -197,3 +197,28 @@ def test_slot_reuse_and_free_map():
     assert (eng.kv.cursors == 0).all()
     # prefill happened in >1 wave (2 slots, 5 requests)
     assert eng.counters["prefill_dispatch"] >= 3
+
+
+def test_sampled_decode_determinism():
+    """temperature > 0: seeded top-p sampling fused into the decode
+    dispatch keeps the scheduler determinism contract — same (seed, trace)
+    => identical tokens at any slot count, different seed => different
+    tokens, greedy stays the default and is unaffected."""
+    from repro.serve.engine import ServeEngine, poisson_trace
+    cfg = C.smoke("qwen3-14b")
+    trace = poisson_trace(5, 6, 1.0, cfg.vocab_size, prompt_lens=(4, 10),
+                         max_new=4)
+
+    def run(slots, **kw):
+        eng = ServeEngine("qwen3-14b", slots=slots, max_seq=32, **kw)
+        fin = eng.run([r.__class__(**vars(r)) for r in trace])
+        return {f.rid: f.tokens.tolist() for f in fin}
+
+    greedy = run(4)
+    kw = dict(temperature=0.8, top_p=0.9, sample_seed=11)
+    sampled = run(4, **kw)
+    assert sampled != greedy                   # sampling actually samples
+    assert run(2, **kw) == sampled             # slot-count invariant
+    assert run(4, temperature=0.8, top_p=0.9, sample_seed=12) != sampled
+    # loop-mode reference prefill samples the same first tokens
+    assert run(4, prefill_mode="loop", **kw) == sampled
